@@ -1,0 +1,67 @@
+"""Shared benchmark helpers: timed runs of the Auto Tiny Classifier flow."""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import encoding as E
+from repro.core.api import AutoTinyClassifier
+from repro.data import load_dataset, train_test_split
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                           "results")
+
+# Dataset panels. `quick` keeps the harness end-to-end honest but CPU-sized;
+# `full` covers the paper's whole Table 1 collection.
+QUICK_PANEL = ("blood", "phoneme", "vehicle", "cars", "led", "iris",
+               "australian", "wall-robot")
+FULL_PANEL = tuple(
+    n for n in __import__("repro.data.tabular", fromlist=["DATASETS"])
+    .DATASETS
+)
+
+ENC2 = (E.EncodingConfig("quantize", 2), E.EncodingConfig("quantile", 2))
+ENC24 = ENC2 + (E.EncodingConfig("quantize", 4), E.EncodingConfig("quantile", 4))
+# best-of {2,4}-bit quantile — the paper's §5.2 protocol, CPU-sized
+ENC_DEFAULT = (E.EncodingConfig("quantile", 2), E.EncodingConfig("quantile", 4))
+
+
+def fit_tiny(ds_name: str, n_gates=300, fn_set="full", kappa=300,
+             max_gens=3000, encodings=ENC_DEFAULT, seed=0, max_rows=20_000):
+    ds = load_dataset(ds_name, max_rows=max_rows)
+    tr, te = train_test_split(ds, 0.2, seed=seed)
+    t0 = time.time()
+    clf = AutoTinyClassifier(
+        n_gates=n_gates, fn_set=fn_set, kappa=kappa, max_gens=max_gens,
+        encodings=encodings, seed=seed,
+    )
+    clf.fit(tr.x, tr.y, ds.n_classes)
+    fit_s = time.time() - t0
+    return {
+        "dataset": ds_name,
+        "n_gates": n_gates,
+        "fn_set": fn_set,
+        "test_bal_acc": round(clf.balanced_score(te.x, te.y), 4),
+        "test_acc": round(clf.accuracy(te.x, te.y), 4),
+        "val_fitness": round(max(r.val_fitness for r in clf.records_), 4),
+        "generations": sum(r.generations for r in clf.records_),
+        "fit_s": round(fit_s, 2),
+    }, clf, (tr, te, ds)
+
+
+def save_json(name: str, payload):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, f"{name}.json"), "w") as f:
+        json.dump(payload, f, indent=1)
+
+
+def csv_row(name: str, us_per_call: float, derived: str) -> str:
+    return f"{name},{us_per_call:.1f},{derived}"
+
+
+def geomean(xs) -> float:
+    xs = np.asarray(xs, dtype=np.float64)
+    return float(np.exp(np.mean(np.log(np.maximum(xs, 1e-9)))))

@@ -1,0 +1,55 @@
+"""Paper Fig. 10: 10-fold cross-validation robustness (violin-plot stats).
+
+Reports median/IQR of Tiny Classifier and GBDT balanced accuracy across
+folds — the paper's claim is a *narrow* Tiny distribution (robustness).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import ENC2, csv_row, save_json
+from repro.core.api import AutoTinyClassifier
+from repro.core.baselines.gbdt import (
+    GBDTConfig, balanced_accuracy, gbdt_predict, train_gbdt,
+)
+from repro.data import kfold, load_dataset
+
+
+def run(quick=True):
+    datasets = ("blood", "phoneme") if quick else ("blood", "phoneme",
+                                                   "vehicle", "led")
+    k = 5 if quick else 10
+    rows = []
+    t0 = time.time()
+    for name in datasets:
+        ds = load_dataset(name, max_rows=20_000)
+        tiny_accs, gb_accs = [], []
+        for fold, (tr, te) in enumerate(kfold(ds, k=k, seed=0)):
+            clf = AutoTinyClassifier(
+                n_gates=300, max_gens=2000 if quick else 8000, kappa=300,
+                encodings=ENC2, seed=fold,
+            )
+            clf.fit(tr.x, tr.y, ds.n_classes)
+            tiny_accs.append(clf.balanced_score(te.x, te.y))
+            gb = train_gbdt(tr.x, tr.y, ds.n_classes, GBDTConfig(n_rounds=40))
+            gb_accs.append(balanced_accuracy(
+                gbdt_predict(gb, te.x), te.y, ds.n_classes))
+        q = lambda a: np.percentile(a, [25, 50, 75]).round(4).tolist()
+        rows.append({
+            "dataset": name, "folds": k,
+            "tiny_q25_med_q75": q(tiny_accs),
+            "xgb_q25_med_q75": q(gb_accs),
+            "tiny_iqr": round(float(np.subtract(*np.percentile(
+                tiny_accs, [75, 25]))), 4),
+            "xgb_iqr": round(float(np.subtract(*np.percentile(
+                gb_accs, [75, 25]))), 4),
+        })
+    save_json("fig10_crossval", rows)
+    us = (time.time() - t0) * 1e6 / max(len(rows) * k, 1)
+    derived = ";".join(
+        f"{r['dataset']}:tiny_med={r['tiny_q25_med_q75'][1]:.3f}"
+        f"/iqr={r['tiny_iqr']:.3f}" for r in rows
+    )
+    return [csv_row("fig10_crossval_robustness", us, derived)]

@@ -1,0 +1,68 @@
+"""Paper Fig. 8: Tiny Classifier design-space sweeps.
+
+  8a — accuracy vs gate count (50→300) × function set {full, nand}
+  8b — accuracy vs κ (termination-window generations)
+  8c — accuracy vs G (max iterations)
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import QUICK_PANEL, csv_row, fit_tiny, geomean, save_json
+
+
+def fig8a(quick=True):
+    datasets = QUICK_PANEL[:5] if quick else QUICK_PANEL
+    gates = (50, 300) if quick else (50, 100, 150, 200, 250, 300)
+    rows = []
+    t0 = time.time()
+    for fs in ("full", "nand"):
+        for g in gates:
+            accs = []
+            for ds in datasets:
+                rec, _, _ = fit_tiny(ds, n_gates=g, fn_set=fs,
+                                     max_gens=4000 if quick else 8000)
+                rec["sweep"] = "fig8a"
+                rows.append(rec)
+                accs.append(rec["test_bal_acc"])
+            rows.append({"sweep": "fig8a-geomean", "fn_set": fs,
+                         "n_gates": g, "geomean": round(geomean(accs), 4)})
+    save_json("fig8a_gates", rows)
+    g_small = geomean([r["test_bal_acc"] for r in rows
+                       if r.get("sweep") == "fig8a" and r["n_gates"] == gates[0]])
+    g_big = geomean([r["test_bal_acc"] for r in rows
+                     if r.get("sweep") == "fig8a" and r["n_gates"] == gates[-1]])
+    us = (time.time() - t0) * 1e6 / max(len(rows), 1)
+    return [csv_row(
+        "fig8a_accuracy_vs_gates", us,
+        f"geomean@{gates[0]}g={g_small:.3f};geomean@{gates[-1]}g={g_big:.3f};"
+        f"delta_pp={100*(g_big-g_small):.1f}",
+    )]
+
+
+def fig8bc(quick=True):
+    datasets = QUICK_PANEL[:4] if quick else QUICK_PANEL
+    kappas = (100, 300, 1000) if quick else (100, 200, 300, 500, 1000)
+    gs = (500, 1500, 4000) if quick else (1000, 2000, 4000, 8000)
+    rows = []
+    t0 = time.time()
+    for kappa in kappas:
+        accs = [fit_tiny(ds, kappa=kappa, max_gens=2000)[0]["test_bal_acc"]
+                for ds in datasets]
+        rows.append({"sweep": "fig8b", "kappa": kappa,
+                     "geomean": round(geomean(accs), 4)})
+    for g in gs:
+        accs = [fit_tiny(ds, kappa=300, max_gens=g)[0]["test_bal_acc"]
+                for ds in datasets]
+        rows.append({"sweep": "fig8c", "max_gens": g,
+                     "geomean": round(geomean(accs), 4)})
+    save_json("fig8bc_termination", rows)
+    us = (time.time() - t0) * 1e6 / max(len(rows), 1)
+    b = {r["kappa"]: r["geomean"] for r in rows if r["sweep"] == "fig8b"}
+    c = {r["max_gens"]: r["geomean"] for r in rows if r["sweep"] == "fig8c"}
+    return [
+        csv_row("fig8b_accuracy_vs_kappa", us,
+                ";".join(f"k{k}={v:.3f}" for k, v in b.items())),
+        csv_row("fig8c_accuracy_vs_iters", us,
+                ";".join(f"G{k}={v:.3f}" for k, v in c.items())),
+    ]

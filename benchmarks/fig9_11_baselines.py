@@ -1,0 +1,61 @@
+"""Paper Fig. 9 / Fig. 11: accuracy vs ML baselines.
+
+Tiny Classifiers vs XGBoost-style GBDT vs best/smallest MLP (float and
+2-bit quantized) over the dataset panel.  Paper's headline: XGBoost best
+(~81 %), Tiny second (~78 %), Tiny ≈ 2-bit-quantized best MLP.
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from benchmarks.common import QUICK_PANEL, csv_row, fit_tiny, save_json
+from repro.core.baselines.gbdt import (
+    GBDTConfig, balanced_accuracy, gbdt_predict, train_gbdt,
+)
+from repro.core.baselines.mlp import MLPConfig, mlp_predict, train_mlp
+from repro.data import load_dataset, train_test_split
+
+
+def _mlp_eval(tr, te, n_classes, cfg):
+    p, norm = train_mlp(tr.x, tr.y, n_classes, cfg)
+    return balanced_accuracy(mlp_predict(p, norm, te.x, cfg), te.y, n_classes)
+
+
+def run(quick=True):
+    datasets = QUICK_PANEL if quick else QUICK_PANEL
+    rows = []
+    t0 = time.time()
+    mlp_small = MLPConfig(hidden_layers=3, hidden_dim=64, epochs=40)
+    mlp_small_q = MLPConfig(hidden_layers=3, hidden_dim=64, epochs=60,
+                            weight_bits=2, act_bits=2)
+    mlp_best = MLPConfig(hidden_layers=9, hidden_dim=512, epochs=30)
+    mlp_best_q = MLPConfig(hidden_layers=9, hidden_dim=512, epochs=40,
+                           weight_bits=2, act_bits=2)
+    for name in datasets:
+        ds = load_dataset(name, max_rows=20_000)
+        tr, te = train_test_split(ds, 0.2, seed=0)
+        rec, _, _ = fit_tiny(name, max_gens=3000 if quick else 8000)
+        gb = train_gbdt(tr.x, tr.y, ds.n_classes,
+                        GBDTConfig(n_rounds=40 if quick else 100))
+        row = {
+            "dataset": name,
+            "tiny": rec["test_bal_acc"],
+            "xgboost": round(balanced_accuracy(
+                gbdt_predict(gb, te.x), te.y, ds.n_classes), 4),
+            "mlp_smallest": round(_mlp_eval(tr, te, ds.n_classes, mlp_small), 4),
+            "mlp_smallest_2bit": round(
+                _mlp_eval(tr, te, ds.n_classes, mlp_small_q), 4),
+        }
+        if not quick:
+            row["mlp_best"] = round(_mlp_eval(tr, te, ds.n_classes, mlp_best), 4)
+            row["mlp_best_2bit"] = round(
+                _mlp_eval(tr, te, ds.n_classes, mlp_best_q), 4)
+        rows.append(row)
+    save_json("fig9_11_baselines", rows)
+    means = {k: float(np.mean([r[k] for r in rows]))
+             for k in rows[0] if k != "dataset"}
+    us = (time.time() - t0) * 1e6 / max(len(rows), 1)
+    derived = ";".join(f"{k}={v:.3f}" for k, v in means.items())
+    return [csv_row("fig9_11_accuracy_vs_baselines", us, derived)]

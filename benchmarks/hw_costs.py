@@ -1,0 +1,80 @@
+"""Paper Figs. 14/15 (45 nm synthesis), Table 2 (FlexIC), Fig. 16 (FPGA).
+
+Evolves Tiny Classifiers for `blood` and `led` (the paper's two hardware
+datasets), runs them through the netlist→GE→area/power/fmax models, and
+compares against the XGBoost and smallest-2-bit-MLP hardware baselines.
+Also validates the cost model against the paper's own published Table 2
+numbers (the calibration targets live in repro.core.hardware).
+"""
+from __future__ import annotations
+
+import time
+
+from benchmarks.common import csv_row, fit_tiny, save_json
+from repro.core import hardware as hw
+
+
+def run(quick=True):
+    rows = []
+    t0 = time.time()
+    for name, xgb_trees, xgb_depth in (("blood", 1, 6), ("led", 10, 5)):
+        rec, clf, (tr, te, ds) = fit_tiny(
+            name, max_gens=2000 if quick else 8000,
+        )
+        net = clf.netlist()
+        for tech in (hw.SILICON_45NM, hw.FLEXIC_08UM):
+            tiny = hw.tiny_classifier_report(net, tech, design=f"tiny-{name}")
+            xgb = hw.gbdt_hw(xgb_trees, xgb_depth, ds.n_features, tech=tech,
+                             design=f"xgb-{name}")
+            mlp = hw.mlp_hw([ds.n_features, 64, 64, 64, ds.n_classes],
+                            tech=tech, design=f"mlp-{name}")
+            rows.append({
+                "dataset": name, "tech": tech.name,
+                "tiny_ge": round(tiny.ge_total, 1),
+                "tiny_area_mm2": round(tiny.area_mm2, 6),
+                "tiny_power_mw": round(tiny.power_mw, 4),
+                "tiny_fmax_khz": round(tiny.fmax_hz / 1e3, 1),
+                "xgb_ge": round(xgb.ge_total, 1),
+                "xgb_area_mm2": round(xgb.area_mm2, 6),
+                "xgb_power_mw": round(xgb.power_mw, 4),
+                "mlp_area_mm2": round(mlp.area_mm2, 6),
+                "mlp_power_mw": round(mlp.power_mw, 4),
+                "area_ratio_xgb": round(xgb.area_mm2 / tiny.area_mm2, 1),
+                "power_ratio_xgb": round(xgb.power_mw / tiny.power_mw, 1),
+                "area_ratio_mlp": round(mlp.area_mm2 / tiny.area_mm2, 1),
+                "power_ratio_mlp": round(mlp.power_mw / tiny.power_mw, 1),
+                "fpga_lut_ratio_xgb": round(xgb.luts / max(tiny.luts, 1), 1),
+                "fpga_lut_ratio_mlp": round(mlp.luts / max(tiny.luts, 1), 1),
+                "test_bal_acc": rec["test_bal_acc"],
+            })
+    # calibration check vs the paper's published Table 2 values
+    cal = {
+        "xgb_blood_flexic_area_model_vs_paper":
+            [round(hw.gbdt_hw(1, 6, 4, tech=hw.FLEXIC_08UM).area_mm2, 2), 5.4],
+        "xgb_led_flexic_area_model_vs_paper":
+            [round(hw.gbdt_hw(10, 5, 7, tech=hw.FLEXIC_08UM).area_mm2, 2), 27.74],
+        "xgb_blood_flexic_power_model_vs_paper":
+            [round(hw.gbdt_hw(1, 6, 4, tech=hw.FLEXIC_08UM).power_mw, 2), 4.12],
+    }
+    save_json("hw_costs", {"rows": rows, "calibration": cal})
+    us = (time.time() - t0) * 1e6 / max(len(rows), 1)
+    fx = [r for r in rows if r["tech"] == "flexic-0.8um"]
+    derived = ";".join(
+        f"{r['dataset']}:area_x{r['area_ratio_xgb']}/pow_x{r['power_ratio_xgb']}"
+        for r in fx
+    ) + ";paper_bands=10-75x"
+    out = [csv_row("table2_flexic_ratios", us, derived)]
+    si = [r for r in rows if r["tech"] == "silicon-45nm"]
+    out.append(csv_row(
+        "fig14_15_silicon", us,
+        ";".join(f"{r['dataset']}:xgb_x{r['area_ratio_xgb']}"
+                 f"/mlp_x{r['area_ratio_mlp']}" for r in si)
+        + ";paper_bands=xgb8-18x,mlp171-278x",
+    ))
+    out.append(csv_row(
+        "fig16_fpga_luts", us,
+        ";".join(f"{r['dataset']}:xgb_x{r['fpga_lut_ratio_xgb']}"
+                 f"/mlp_x{r['fpga_lut_ratio_mlp']}" for r in fx)
+        + ";paper_bands=3-11x",
+    ))
+    return out

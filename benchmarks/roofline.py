@@ -1,0 +1,179 @@
+"""§Roofline: three-term analysis from the dry-run's compiled artifacts.
+
+    compute term    = exec_FLOPs_per_chip / peak_FLOP/s          (197 TF bf16)
+    memory term     = HBM_bytes_per_chip / HBM_bw                (819 GB/s)
+    collective term = collective_bytes_per_chip / link_bw        (50 GB/s)
+
+**Loop-count correction.**  XLA's `cost_analysis()` on this backend counts
+`while`-loop bodies once, so raw HLO FLOPs undercount a scanned-layers ×
+microbatch × attention-chunk program by 1–3 orders of magnitude (measured
+llama3-405b train: raw ratio ≈ 1054× ≈ layers·microbatches/2).  We therefore
+use an **analytic executed-FLOPs model** (documented below), and scale the
+measured HBM/collective bytes by the same per-cell factor
+`exec_flops / hlo_flops` (valid because ≈ all traffic is inside the same
+loops); the factor is reported per cell.
+
+Executed-FLOPs model (per cell):
+  matmul fwd        2 · N_active · tokens     (MoE: × capacity_factor waste)
+  train             × 4 (bwd 2×, remat fwd 1×)
+  attention fwd     4 · B · Sq · Skv_executed · Hq · hd · L
+                    (our chunked flash computes *all* blocks and masks —
+                     Skv_executed = S even for causal/sliding; that gap is
+                     exactly what the usefulness ratio exposes)
+  train attention   × 6 (recomputed twice more in the checkpointed backward)
+
+MODEL_FLOPS (the brief's 6·N·D / 2·N·D) over executed FLOPs = usefulness;
+MODEL_FLOPS over chips over the dominant term = roofline fraction.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+import time
+
+from benchmarks.common import RESULTS_DIR, csv_row, save_json
+
+PEAK_FLOPS = 197e12
+HBM_BW = 819e9
+LINK_BW = 50e9
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def _exec_flops(cfg, shape) -> float:
+    """Analytic executed FLOPs for one step of this cell (global)."""
+    b, s = shape.global_batch, shape.seq_len
+    kind = shape.kind
+    n_act = cfg.active_params()
+    waste = cfg.moe.capacity_factor if cfg.moe is not None else 1.0
+    if kind == "train":
+        toks = b * s
+        mm = 8.0 * n_act * toks * waste          # fwd + bwd + remat fwd
+        attn_mult = 6.0
+        sq = skv = s
+    elif kind == "prefill":
+        toks = b * s
+        mm = 2.0 * n_act * toks * waste
+        attn_mult = 1.0
+        sq = skv = s
+    else:  # decode: one token against an s-long cache
+        toks = b
+        mm = 2.0 * n_act * toks * waste
+        attn_mult = 1.0
+        sq, skv = 1, s
+    attn = 0.0
+    if cfg.block_kind in ("attn", "hybrid") and cfg.n_heads:
+        if kind == "decode" and cfg.attn_kind == "sliding":
+            skv_eff = min(cfg.window, skv)
+            n_full = max(len(cfg.global_layers), 0)
+            attn = 4.0 * b * sq * (
+                skv_eff * (cfg.n_layers - n_full) + skv * n_full
+            ) * cfg.n_heads * cfg.head_dim
+        else:
+            attn = 4.0 * b * sq * skv * cfg.n_heads * cfg.head_dim \
+                * cfg.n_layers
+        attn *= attn_mult
+    if cfg.block_kind == "rwkv":
+        # chunked linear recurrence ≈ 4 ops per (token, channel, head_dim)
+        hd = cfg.ssm.head_dim
+        attn = 4.0 * b * (s if kind != "decode" else 1) * cfg.d_model * hd \
+            * cfg.n_layers * attn_mult
+    return mm + attn
+
+
+def _model_flops(cfg, shape) -> float:
+    b, s = shape.global_batch, shape.seq_len
+    toks = b * s if shape.kind != "decode" else b
+    mult = 6 if shape.kind == "train" else 2
+    return mult * cfg.active_params() * toks
+
+
+def analyse_record(rec: dict) -> dict | None:
+    if rec.get("status") != "ok" or rec.get("arch") == "autotc":
+        return None
+    from repro.configs import SHAPES, get_config
+
+    cfg = get_config(rec["arch"])
+    shape = SHAPES[rec["shape"]]
+    nd = rec.get("n_devices", 1)
+
+    cost = rec.get("cost", {})
+    hlo_flops = cost.get("flops", 0.0)
+    hlo_bytes = cost.get("bytes accessed", 0.0)
+    coll_bytes = rec.get("collectives", {}).get("weighted_bytes", 0.0)
+
+    exec_fl = _exec_flops(cfg, shape)
+    factor = max(exec_fl / max(hlo_flops * nd, 1.0), 1.0)
+
+    t_compute = exec_fl / nd / PEAK_FLOPS
+    t_memory = hlo_bytes * factor / HBM_BW
+    t_coll = coll_bytes * factor / LINK_BW
+    terms = {"compute": t_compute, "memory": t_memory, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+
+    mf = _model_flops(cfg, shape)
+    useful = mf / exec_fl
+    step = max(terms.values())
+    frac = (mf / nd) / max(step, 1e-12) / PEAK_FLOPS
+
+    advice = {
+        "compute": "cut executed FLOPs: causal block-skip in the chunked "
+                   "attention, lighter remat policy, lower MoE capacity",
+        "memory": "cut HBM traffic: fuse/bigger tiles, bf16 end-to-end, "
+                  "avoid rematerialised reads",
+        "collective": "cut gather/reduce volume: better weight layout, "
+                      "overlap collectives with compute, wider fsdp",
+    }[dominant]
+
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "compute_s": t_compute, "memory_s": t_memory, "collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops": mf,
+        "exec_flops": exec_fl,
+        "loop_correction": factor,
+        "useful_flop_ratio": useful,
+        "roofline_fraction": frac,
+        "temp_gib": rec.get("memory", {}).get("temp_size_in_bytes", 0) / 2**30,
+        "args_gib": rec.get("memory", {})
+        .get("argument_size_in_bytes", 0) / 2**30,
+        "advice": advice,
+    }
+
+
+def run(quick=True, mesh_glob="*"):
+    t0 = time.time()
+    rows = []
+    for path in sorted(glob.glob(
+            os.path.join(DRYRUN_DIR, mesh_glob, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        r = analyse_record(rec)
+        if r:
+            rows.append(r)
+    save_json("roofline", rows)
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, "roofline.md"), "w") as f:
+        f.write("| arch | shape | mesh | compute s | memory s | coll s | "
+                "dominant | useful | roofline frac | loop-corr |\n")
+        f.write("|---|---|---|---|---|---|---|---|---|---|\n")
+        for r in sorted(rows, key=lambda x: (x["mesh"], x["arch"],
+                                             x["shape"])):
+            f.write(
+                f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+                f"| {r['compute_s']:.2e} | {r['memory_s']:.2e} "
+                f"| {r['collective_s']:.2e} | {r['dominant']} "
+                f"| {r['useful_flop_ratio']:.2f} "
+                f"| {r['roofline_fraction']:.3f} "
+                f"| {r['loop_correction']:.0f} |\n"
+            )
+    dom = {}
+    for r in rows:
+        dom[r["dominant"]] = dom.get(r["dominant"], 0) + 1
+    us = (time.time() - t0) * 1e6 / max(len(rows), 1)
+    return [csv_row(
+        "roofline_terms", us,
+        f"cells={len(rows)};" + ";".join(f"{k}={v}" for k, v in dom.items()),
+    )]

@@ -1,0 +1,68 @@
+"""Fitness-evaluation throughput: Pallas kernel (interpret on CPU) vs the
+jnp oracle, plus end-to-end generations/second of the 1+λ loop.
+
+On-TPU the kernel compiles natively; interpret-mode numbers here validate
+plumbing, not speed — the roofline analysis covers TPU projections.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import csv_row, save_json
+from repro.core import encoding as E
+from repro.core import gates
+from repro.core.evolve import EvolveConfig, evolve_packed
+from repro.core.genome import CircuitSpec, init_genome, opcodes
+from repro.kernels import ops, ref
+
+
+def run(quick=True):
+    rows = []
+    out = []
+    rng = np.random.RandomState(0)
+    rows_n = 100_000 if quick else 1_000_000
+    n_inputs, n_nodes, pop = 64, 300, 5
+    bits = rng.randint(0, 2, (rows_n, n_inputs)).astype(np.uint8)
+    w = E.n_words(rows_n)
+    xw = jnp.asarray(E.pack_bits_rows(bits, w))
+    spec = CircuitSpec(n_inputs, n_nodes, 2, gates.FULL_FS)
+    gs = jax.vmap(lambda k: init_genome(k, spec))(
+        jax.random.split(jax.random.key(0), pop)
+    )
+    ops_arr = opcodes(gs, spec)
+
+    f_ref = jax.jit(lambda o, e, s: ref.eval_population_packed(o, e, s, xw))
+    f_ref(ops_arr, gs.edge_src, gs.out_src)[0].block_until_ready()
+    t0 = time.time()
+    reps = 5
+    for _ in range(reps):
+        r = f_ref(ops_arr, gs.edge_src, gs.out_src)
+    jax.block_until_ready(r)
+    dt_ref = (time.time() - t0) / reps
+    rows_per_s = pop * rows_n * n_nodes / dt_ref
+    rows.append({"impl": "jnp-oracle", "s_per_eval": dt_ref,
+                 "gate_rows_per_s": rows_per_s})
+    out.append(csv_row("circuit_eval_oracle", dt_ref * 1e6,
+                       f"gate_rows_per_s={rows_per_s:.2e}"))
+
+    # end-to-end evolution throughput
+    y = rng.randint(0, 2, rows_n)
+    data = E.pack_dataset(bits[:, :16], y, 2)
+    spec_e = CircuitSpec(16, 300, 1, gates.FULL_FS)
+    mtr, mva = E.split_masks(rows_n, data.x_words.shape[1], 0.5, 1)
+    cfg = EvolveConfig(lam=4, kappa=10**9, max_gens=100)
+    fn = jax.jit(lambda k: evolve_packed(k, spec_e, cfg, data, mtr, mva))
+    fn(jax.random.key(0)).gen.block_until_ready()
+    t0 = time.time()
+    st = fn(jax.random.key(1))
+    jax.block_until_ready(st.gen)
+    gens_per_s = 100 / (time.time() - t0)
+    rows.append({"impl": "evolve-loop", "gens_per_s": gens_per_s})
+    out.append(csv_row("evolve_generations", 1e6 / gens_per_s,
+                       f"gens_per_s={gens_per_s:.1f};rows={rows_n}"))
+    save_json("throughput", rows)
+    return out

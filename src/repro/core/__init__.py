@@ -1,0 +1,18 @@
+"""Auto Tiny Classifiers — the paper's core contribution in JAX.
+
+Public surface:
+  * CircuitSpec / Genome            — genome.py
+  * EncodingConfig / fit_encoder    — encoding.py
+  * EvolveConfig / evolve           — evolve.py
+  * AutoTinyClassifier              — api.py (sklearn-style end-to-end flow)
+"""
+from repro.core.genome import CircuitSpec, Genome, init_genome  # noqa: F401
+from repro.core.encoding import (  # noqa: F401
+    EncodingConfig,
+    PackedDataset,
+    fit_encoder,
+    encode,
+    pack_dataset,
+    split_masks,
+)
+from repro.core.evolve import EvolveConfig, EvolveState, evolve, evolve_packed  # noqa: F401

@@ -1,0 +1,2 @@
+from repro.core.baselines.mlp import MLPConfig, train_mlp, mlp_predict  # noqa: F401
+from repro.core.baselines.gbdt import GBDTConfig, train_gbdt, gbdt_predict  # noqa: F401

@@ -1,0 +1,135 @@
+"""MLP baseline in JAX (paper §5.1/§5.4, the Kadra-et-al protocol).
+
+Two configurations used by the paper's hardware comparison:
+  * "best MLP":     9 hidden layers × 512 neurons
+  * "smallest MLP": 3 hidden layers × 64 neurons
+each trained non-quantized and as a **2-bit quantized** version (straight-
+through estimator for weights and 2-bit quantized ReLU activations, mirroring
+the Brevitas/FINN recipe the paper uses for FPGA synthesis).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class MLPConfig:
+    hidden_layers: int = 3
+    hidden_dim: int = 64
+    weight_bits: int | None = None  # None → float; 2 → paper's quantized MLP
+    act_bits: int | None = None
+    lr: float = 3e-3
+    epochs: int = 60
+    batch_size: int = 128
+    seed: int = 0
+
+    def layer_sizes(self, n_in: int, n_classes: int) -> list[int]:
+        return [n_in] + [self.hidden_dim] * self.hidden_layers + [n_classes]
+
+
+BEST_MLP = MLPConfig(hidden_layers=9, hidden_dim=512)
+SMALLEST_MLP = MLPConfig(hidden_layers=3, hidden_dim=64)
+
+
+class MLPParams(NamedTuple):
+    ws: list
+    bs: list
+
+
+def _init(key, sizes):
+    ws, bs = [], []
+    for a, b in zip(sizes[:-1], sizes[1:]):
+        key, k = jax.random.split(key)
+        ws.append(jax.random.normal(k, (a, b)) * jnp.sqrt(2.0 / a))
+        bs.append(jnp.zeros((b,)))
+    return MLPParams(ws, bs)
+
+
+def _fake_quant_sym(x, bits):
+    """Symmetric *per-output-channel* fake quantization, straight-through
+    gradients (FINN/Brevitas-style; per-tensor 2-bit collapses training)."""
+    qmax = 2.0 ** (bits - 1) - 1          # 2-bit → {-1, 0, 1}
+    scale = jnp.maximum(jnp.max(jnp.abs(x), axis=0, keepdims=True), 1e-6) / qmax
+    q = jnp.clip(jnp.round(x / scale), -qmax, qmax) * scale
+    return x + jax.lax.stop_gradient(q - x)
+
+
+def _fake_quant_relu(x, bits):
+    """Quantized ReLU (unsigned levels), straight-through through the round."""
+    r = jax.nn.relu(x)
+    qmax = 2.0 ** bits - 1
+    scale = jnp.maximum(jnp.max(r), 1e-6) / qmax
+    q = jnp.clip(jnp.round(r / scale), 0, qmax) * scale
+    return r + jax.lax.stop_gradient(q - r)
+
+
+def _forward(params: MLPParams, x, cfg: MLPConfig):
+    h = x
+    n = len(params.ws)
+    for i, (w, b) in enumerate(zip(params.ws, params.bs)):
+        if cfg.weight_bits is not None:
+            w = _fake_quant_sym(w, cfg.weight_bits)
+        h = h @ w + b
+        if i < n - 1:
+            if cfg.act_bits is not None:
+                h = _fake_quant_relu(h, cfg.act_bits)
+            else:
+                h = jax.nn.relu(h)
+    return h  # logits
+
+
+def train_mlp(x: np.ndarray, y: np.ndarray, n_classes: int, cfg: MLPConfig):
+    """Adam training with feature standardisation; returns (params, norm)."""
+    x = np.asarray(x, np.float32)
+    mu, sd = x.mean(0), x.std(0) + 1e-6
+    xn = (x - mu) / sd
+    y = jnp.asarray(y, jnp.int32)
+    xj = jnp.asarray(xn)
+
+    key = jax.random.key(cfg.seed)
+    params = _init(key, cfg.layer_sizes(x.shape[1], n_classes))
+    m = jax.tree.map(jnp.zeros_like, params)
+    v = jax.tree.map(jnp.zeros_like, params)
+
+    def loss_fn(p, xb, yb):
+        logits = _forward(p, xb, cfg)
+        return jnp.mean(
+            -jax.nn.log_softmax(logits)[jnp.arange(xb.shape[0]), yb]
+        )
+
+    @jax.jit
+    def step(p, m, v, t, xb, yb):
+        g = jax.grad(loss_fn)(p, xb, yb)
+        b1, b2, eps = 0.9, 0.999, 1e-8
+        m = jax.tree.map(lambda a, b: b1 * a + (1 - b1) * b, m, g)
+        v = jax.tree.map(lambda a, b: b2 * a + (1 - b2) * b * b, v, g)
+        mh = jax.tree.map(lambda a: a / (1 - b1 ** t), m)
+        vh = jax.tree.map(lambda a: a / (1 - b2 ** t), v)
+        p = jax.tree.map(
+            lambda a, mm, vv: a - cfg.lr * mm / (jnp.sqrt(vv) + eps), p, mh, vh
+        )
+        return p, m, v
+
+    rng = np.random.RandomState(cfg.seed)
+    n = x.shape[0]
+    bs = min(cfg.batch_size, n)
+    t = 0
+    for _ in range(cfg.epochs):
+        perm = rng.permutation(n)
+        for s in range(0, n - bs + 1, bs):
+            idx = perm[s : s + bs]
+            t += 1
+            params, m, v = step(params, m, v, float(t), xj[idx], y[idx])
+    return params, (mu, sd)
+
+
+def mlp_predict(params, norm, x, cfg: MLPConfig) -> np.ndarray:
+    mu, sd = norm
+    xn = jnp.asarray((np.asarray(x, np.float32) - mu) / sd)
+    logits = _forward(params, xn, cfg)
+    return np.asarray(jnp.argmax(logits, axis=-1))

@@ -1,0 +1,211 @@
+"""Feature → bit encoders and bit-packing (paper §5.2, §4.1).
+
+Encoding strategies (paper names):
+  * ``quantize``  — equal-width buckets, binary code
+  * ``quantile``  — equal-frequency buckets, binary code
+  * ``gray``      — equal-width buckets, Gray code
+  * ``onehot``    — equal-frequency buckets, one-hot code (bits == buckets)
+
+``bits`` is the user-tunable *bits per input* (paper evaluates 2 and 4).
+Binary/Gray use 2**bits buckets; one-hot uses ``bits`` buckets.
+
+Packing layout (DESIGN.md §3.1): dataset rows are packed 32/``uint32`` word.
+``x_words[b, w]`` bit ``j`` is the value of encoded input bit ``b`` for row
+``32*w + j``.  Fitness then reduces with ``lax.population_count`` and is
+exactly invariant to sharding the word axis (psum of confusion counts).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+STRATEGIES = ("quantize", "quantile", "gray", "onehot")
+
+
+@dataclasses.dataclass(frozen=True)
+class EncodingConfig:
+    strategy: str = "quantize"
+    bits: int = 2
+
+    def __post_init__(self):
+        assert self.strategy in STRATEGIES, self.strategy
+        assert 1 <= self.bits <= 8
+
+    @property
+    def n_buckets(self) -> int:
+        return self.bits if self.strategy == "onehot" else 2 ** self.bits
+
+
+class Encoder(NamedTuple):
+    """Fitted per-feature thresholds + code table (host numpy)."""
+
+    thresholds: np.ndarray  # float32[F, n_buckets-1], ascending per feature
+    codes: np.ndarray       # uint8[n_buckets, bits]
+    strategy: str
+    bits: int
+
+    @property
+    def n_features(self) -> int:
+        return self.thresholds.shape[0]
+
+    @property
+    def n_bits_total(self) -> int:
+        return self.n_features * self.bits
+
+
+def _gray(i: int) -> int:
+    return i ^ (i >> 1)
+
+
+def _code_table(cfg: EncodingConfig) -> np.ndarray:
+    nb, bits = cfg.n_buckets, cfg.bits
+    table = np.zeros((nb, bits), dtype=np.uint8)
+    for i in range(nb):
+        if cfg.strategy == "onehot":
+            table[i, i] = 1
+        else:
+            v = _gray(i) if cfg.strategy == "gray" else i
+            for b in range(bits):
+                table[i, b] = (v >> b) & 1
+    return table
+
+
+def fit_encoder(x_train: np.ndarray, cfg: EncodingConfig) -> Encoder:
+    """Fit per-feature bucket thresholds on training data only."""
+    x = np.asarray(x_train, dtype=np.float64)
+    assert x.ndim == 2
+    nb = cfg.n_buckets
+    if cfg.strategy in ("quantize", "gray"):
+        lo, hi = x.min(axis=0), x.max(axis=0)
+        span = np.where(hi > lo, hi - lo, 1.0)
+        edges = lo[:, None] + span[:, None] * (np.arange(1, nb) / nb)[None, :]
+    else:  # equal-frequency
+        qs = np.quantile(x, np.arange(1, nb) / nb, axis=0).T  # (F, nb-1)
+        edges = qs
+    # strictly non-decreasing thresholds per feature
+    edges = np.maximum.accumulate(edges, axis=1)
+    return Encoder(edges.astype(np.float32), _code_table(cfg), cfg.strategy, cfg.bits)
+
+
+def encode(enc: Encoder, x: np.ndarray) -> np.ndarray:
+    """Encode raw features → bit matrix uint8[R, F*bits]."""
+    x = np.asarray(x, dtype=np.float32)
+    r, f = x.shape
+    assert f == enc.n_features
+    buckets = np.empty((r, f), dtype=np.int64)
+    for j in range(f):
+        buckets[:, j] = np.searchsorted(enc.thresholds[j], x[:, j], side="right")
+    bits = enc.codes[buckets]                 # (R, F, bits)
+    return bits.reshape(r, f * enc.bits).astype(np.uint8)
+
+
+def class_code_bits(n_classes: int, n_out_bits: int | None = None) -> np.ndarray:
+    """Binary class codes uint8[C, O] (paper §3.6: outputs encode the class)."""
+    o = n_out_bits or max(1, int(np.ceil(np.log2(max(n_classes, 2)))))
+    assert 2 ** o >= n_classes, (o, n_classes)
+    table = np.zeros((n_classes, o), dtype=np.uint8)
+    for c in range(n_classes):
+        for b in range(o):
+            table[c, b] = (c >> b) & 1
+    return table
+
+
+# ---------------------------------------------------------------------------
+# Packing
+# ---------------------------------------------------------------------------
+
+WORD = 32
+
+
+def n_words(n_rows: int, pad_to: int = 1) -> int:
+    w = (n_rows + WORD - 1) // WORD
+    return ((w + pad_to - 1) // pad_to) * pad_to
+
+
+class PackedDataset(NamedTuple):
+    """Bit-packed dataset; all arrays share the word axis W (shardable)."""
+
+    x_words: jax.Array      # uint32[I, W] encoded input bits
+    y_words: jax.Array      # uint32[O, W] class-code bits of the label
+    class_words: jax.Array  # uint32[C, W] row mask per class (y == c)
+    mask_words: jax.Array   # uint32[W]    valid (non-padding) rows
+
+    @property
+    def n_inputs(self) -> int:
+        return self.x_words.shape[0]
+
+    @property
+    def n_outputs(self) -> int:
+        return self.y_words.shape[0]
+
+    @property
+    def n_classes(self) -> int:
+        return self.class_words.shape[0]
+
+
+def pack_bits_rows(bits: np.ndarray, w: int) -> np.ndarray:
+    """uint8[R, B] {0,1} → uint32[B, w] packed along rows."""
+    r, b = bits.shape
+    pad = w * WORD - r
+    assert pad >= 0
+    x = np.concatenate([bits, np.zeros((pad, b), np.uint8)], axis=0)
+    x = x.T.reshape(b, w, WORD).astype(np.uint32)
+    return (x << np.arange(WORD, dtype=np.uint32)[None, None, :]).sum(
+        axis=-1, dtype=np.uint32
+    )
+
+
+def unpack_words(words: jax.Array, n_rows: int) -> jax.Array:
+    """uint32[…, W] → uint8[…, n_rows] (jnp; inverse of pack_bits_rows)."""
+    shifts = jnp.arange(WORD, dtype=jnp.uint32)
+    bits = (words[..., None] >> shifts) & jnp.uint32(1)
+    flat = bits.reshape(*words.shape[:-1], -1)
+    return flat[..., :n_rows].astype(jnp.uint8)
+
+
+def pack_dataset(
+    bits: np.ndarray,
+    y: np.ndarray,
+    n_classes: int,
+    n_out_bits: int | None = None,
+    pad_words_to: int = 1,
+) -> PackedDataset:
+    """Pack an encoded bit matrix + labels into a PackedDataset.
+
+    pad_words_to: round W up (e.g. to 128·k lanes for the Pallas kernel, or to
+    the data-shard count for distributed fitness).
+    """
+    r = bits.shape[0]
+    y = np.asarray(y, dtype=np.int64)
+    assert y.shape == (r,)
+    w = n_words(r, pad_words_to)
+    codes = class_code_bits(n_classes, n_out_bits)        # (C, O)
+    y_bits = codes[y]                                     # (R, O)
+    cls_bits = (y[:, None] == np.arange(n_classes)[None, :]).astype(np.uint8)
+    mask_bits = np.ones((r, 1), dtype=np.uint8)
+    return PackedDataset(
+        x_words=jnp.asarray(pack_bits_rows(bits, w)),
+        y_words=jnp.asarray(pack_bits_rows(y_bits, w)),
+        class_words=jnp.asarray(pack_bits_rows(cls_bits, w)),
+        mask_words=jnp.asarray(pack_bits_rows(mask_bits, w)[0]),
+    )
+
+
+def split_masks(
+    n_rows: int, w: int, val_fraction: float, seed: int
+) -> tuple[jax.Array, jax.Array]:
+    """Random row-level train/val masks as packed words (paper §3.3: 50/50
+    split by default; fitness on train selects, fitness on val picks the
+    best-discovered solution)."""
+    rng = np.random.RandomState(seed)
+    is_val = rng.rand(n_rows) < val_fraction
+    tr = (~is_val)[:, None].astype(np.uint8)
+    va = is_val[:, None].astype(np.uint8)
+    return (
+        jnp.asarray(pack_bits_rows(tr, w)[0]),
+        jnp.asarray(pack_bits_rows(va, w)[0]),
+    )

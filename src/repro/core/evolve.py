@@ -1,0 +1,187 @@
+"""The 1+λ evolutionary loop with neutral drift (paper §3).
+
+Selection uses ``>=`` (a child with *equal* training fitness replaces the
+parent) — the neutral-drift random walk over equivalent solutions that lets
+the search escape local optima (paper §3, Kimura's neutral theory).
+
+Best-solution tracking and termination follow §3.3–3.4:
+  * training fitness selects the next parent;
+  * validation fitness picks the best-discovered solution;
+  * terminate when validation fitness has not improved by ≥ γ within κ
+    generations, or after G generations.
+
+Hyper-parameter defaults are the paper's: λ=4, p=1/n, γ=0.01 (§3.5); the
+evaluation settings n=300 gates, κ=300, G=8000 (§5.4) live in configs.
+
+Fitness evaluation is *batched over the population* (λ children evaluated in
+one pass) so the same code path drives the pure-jnp oracle, the Pallas
+kernel, and the shard_map'd distributed islands (repro.core.islands).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import fitness as F
+from repro.core.encoding import PackedDataset
+from repro.core.genome import CircuitSpec, Genome, init_genome, opcodes
+from repro.core.mutate import mutate_children
+from repro.kernels import ops as kernel_ops
+
+# Batched eval: stacked genomes (leading λ axis) → (train_fits, val_fits).
+BatchEvalFn = Callable[[Genome], tuple[jax.Array, jax.Array]]
+
+
+@dataclasses.dataclass(frozen=True)
+class EvolveConfig:
+    lam: int = 4
+    p: float | None = None   # mutation rate; None → 1/n (paper §3.5)
+    gamma: float = 0.01
+    kappa: int = 300
+    max_gens: int = 8000
+    use_kernel: bool = False  # route fitness eval through the Pallas kernel
+
+    def rate(self, spec: CircuitSpec) -> float:
+        return self.p if self.p is not None else 1.0 / spec.n_nodes
+
+
+class EvolveState(NamedTuple):
+    key: jax.Array
+    parent: Genome
+    parent_fit: jax.Array   # f32 training fitness of S
+    best: Genome            # best-discovered solution (by validation fitness)
+    best_val: jax.Array     # f32
+    best_train: jax.Array   # f32 training fitness of `best` (reporting)
+    ref_val: jax.Array      # γ-improvement reference (§3.4)
+    since: jax.Array        # generations since the last ≥γ val improvement
+    gen: jax.Array          # generation counter
+
+
+def make_eval_fn(
+    spec: CircuitSpec,
+    data: PackedDataset,
+    mask_train: jax.Array,
+    mask_val: jax.Array,
+    use_kernel: bool = False,
+) -> BatchEvalFn:
+    """Single forward pass over *all* packed rows; train and val fitness are
+    two masked confusion reductions over the same circuit outputs."""
+
+    def eval_fn(genomes: Genome):
+        out = kernel_ops.eval_population(
+            opcodes(genomes, spec), genomes.edge_src, genomes.out_src,
+            data.x_words, use_kernel=use_kernel,
+        )  # (λ, O, W)
+        ft = jax.vmap(lambda o: F.balanced_accuracy(o, data, mask_train))(out)
+        fv = jax.vmap(lambda o: F.balanced_accuracy(o, data, mask_val))(out)
+        return ft, fv
+
+    return eval_fn
+
+
+def _stack1(genome: Genome) -> Genome:
+    return jax.tree.map(lambda x: x[None], genome)
+
+
+def _select(key, fits: jax.Array) -> jax.Array:
+    """argmax with uniform tie-breaking (paper §3: ties at random)."""
+    m = fits.max()
+    u = jax.random.uniform(key, fits.shape)
+    return jnp.argmax(jnp.where(fits == m, u, -1.0))
+
+
+def init_state(key: jax.Array, spec: CircuitSpec, eval_fn: BatchEvalFn) -> EvolveState:
+    k_init, key = jax.random.split(key)
+    parent = init_genome(k_init, spec)
+    ft, fv = eval_fn(_stack1(parent))
+    zero = jnp.zeros((), jnp.int32)
+    return EvolveState(
+        key=key, parent=parent, parent_fit=ft[0],
+        best=parent, best_val=fv[0], best_train=ft[0],
+        ref_val=fv[0], since=zero, gen=zero,
+    )
+
+
+def generation_step(
+    state: EvolveState, spec: CircuitSpec, cfg: EvolveConfig, eval_fn: BatchEvalFn
+) -> EvolveState:
+    key, k_mut, k_sel = jax.random.split(state.key, 3)
+    children = mutate_children(k_mut, state.parent, spec, cfg.rate(spec), cfg.lam)
+    ft, fv = eval_fn(children)  # (λ,), (λ,)
+
+    # --- parent replacement: any child with f_i >= f_S; highest wins ---
+    sel = _select(k_sel, ft)
+    accept = ft[sel] >= state.parent_fit
+    parent = jax.tree.map(
+        lambda c, p: jnp.where(accept, c[sel], p), children, state.parent
+    )
+    parent_fit = jnp.where(accept, ft[sel], state.parent_fit)
+
+    # --- best-discovered solution by validation fitness ---
+    bidx = jnp.argmax(fv)
+    improved = fv[bidx] > state.best_val
+    best = jax.tree.map(
+        lambda c, b: jnp.where(improved, c[bidx], b), children, state.best
+    )
+    best_val = jnp.maximum(state.best_val, fv[bidx])
+    best_train = jnp.where(improved, ft[bidx], state.best_train)
+
+    # --- γ/κ termination bookkeeping ---
+    big_improve = best_val >= state.ref_val + cfg.gamma
+    ref_val = jnp.where(big_improve, best_val, state.ref_val)
+    since = jnp.where(big_improve, 0, state.since + 1)
+
+    return EvolveState(
+        key=key, parent=parent, parent_fit=parent_fit,
+        best=best, best_val=best_val, best_train=best_train,
+        ref_val=ref_val, since=since, gen=state.gen + 1,
+    )
+
+
+def not_terminated(state: EvolveState, cfg: EvolveConfig) -> jax.Array:
+    return (state.gen < cfg.max_gens) & (state.since < cfg.kappa)
+
+
+def evolve(
+    key: jax.Array, spec: CircuitSpec, cfg: EvolveConfig, eval_fn: BatchEvalFn
+) -> EvolveState:
+    """Run to termination (lax.while_loop — early exit, no history)."""
+    state = init_state(key, spec, eval_fn)
+    return jax.lax.while_loop(
+        lambda s: not_terminated(s, cfg),
+        lambda s: generation_step(s, spec, cfg, eval_fn),
+        state,
+    )
+
+
+def evolve_with_history(
+    key: jax.Array, spec: CircuitSpec, cfg: EvolveConfig, eval_fn: BatchEvalFn
+):
+    """Fixed-length scan variant recording per-generation curves (used by the
+    Fig. 8 benchmarks).  Terminated states pass through unchanged."""
+    state = init_state(key, spec, eval_fn)
+
+    def body(s, _):
+        live = not_terminated(s, cfg)
+        s2 = generation_step(s, spec, cfg, eval_fn)
+        s = jax.tree.map(lambda a, b: jnp.where(live, a, b), s2, s)
+        return s, (s.parent_fit, s.best_val, live)
+
+    final, hist = jax.lax.scan(body, state, None, length=cfg.max_gens)
+    return final, hist
+
+
+def evolve_packed(
+    key: jax.Array,
+    spec: CircuitSpec,
+    cfg: EvolveConfig,
+    data: PackedDataset,
+    mask_train: jax.Array,
+    mask_val: jax.Array,
+) -> EvolveState:
+    """Convenience: evolve directly on a PackedDataset."""
+    eval_fn = make_eval_fn(spec, data, mask_train, mask_val, cfg.use_kernel)
+    return evolve(key, spec, cfg, eval_fn)

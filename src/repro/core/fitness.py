@@ -1,0 +1,83 @@
+"""Fitness = balanced accuracy (paper §3.3), computed on packed words.
+
+The packed path reduces with ``lax.population_count`` and produces per-class
+(correct, count) confusion sums.  Those sums are linear in the word axis, so
+data-parallel fitness is a single ``psum`` over confusion counts
+(repro.core.islands) and is *exactly* invariant to sharding.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.encoding import PackedDataset
+
+popcount = jax.lax.population_count
+
+
+def _eq_words(out_words: jax.Array, y_words: jax.Array) -> jax.Array:
+    """uint32[W] with bit r set iff all O predicted bits equal the label code
+    bits for row r."""
+    eq = ~(out_words ^ y_words)            # per-bit equality, (O, W)
+    full = jnp.full((), 0xFFFFFFFF, jnp.uint32)
+    return jax.lax.reduce(eq, full, jax.lax.bitwise_and, (0,))
+
+
+def confusion_counts(
+    out_words: jax.Array,  # uint32[O, W] circuit outputs
+    data: PackedDataset,
+    mask_words: jax.Array,  # uint32[W] row subset (train or val split)
+) -> tuple[jax.Array, jax.Array]:
+    """Per-class (correct, count) int32[C] over the masked rows."""
+    eq = _eq_words(out_words, data.y_words)            # (W,)
+    sel = data.class_words & mask_words[None, :]       # (C, W)
+    correct = popcount(sel & eq[None, :]).sum(axis=-1)
+    count = popcount(sel).sum(axis=-1)
+    return correct.astype(jnp.int32), count.astype(jnp.int32)
+
+
+def balanced_accuracy_from_counts(correct: jax.Array, count: jax.Array) -> jax.Array:
+    """Mean per-class recall over classes present in the masked rows."""
+    present = count > 0
+    recall = jnp.where(present, correct / jnp.maximum(count, 1), 0.0)
+    return (recall.sum() / jnp.maximum(present.sum(), 1)).astype(jnp.float32)
+
+
+def balanced_accuracy(out_words, data: PackedDataset, mask_words) -> jax.Array:
+    c, n = confusion_counts(out_words, data, mask_words)
+    return balanced_accuracy_from_counts(c, n)
+
+
+def plain_accuracy(out_words, data: PackedDataset, mask_words) -> jax.Array:
+    """Unbalanced accuracy (reported alongside, e.g. Fig. 9 comparisons)."""
+    eq = _eq_words(out_words, data.y_words)
+    num = popcount(eq & mask_words).sum()
+    den = popcount(mask_words).sum()
+    return (num / jnp.maximum(den, 1)).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Unpacked reference (tests only)
+# ---------------------------------------------------------------------------
+
+def balanced_accuracy_rows(pred_ids, y_ids, valid, n_classes: int) -> float:
+    """Numpy-style reference on unpacked per-row class ids."""
+    import numpy as np
+
+    pred_ids, y_ids, valid = map(np.asarray, (pred_ids, y_ids, valid))
+    recalls = []
+    for c in range(n_classes):
+        m = (y_ids == c) & valid
+        if m.sum() == 0:
+            continue
+        recalls.append(float(((pred_ids == y_ids) & m).sum() / m.sum()))
+    return float(np.mean(recalls)) if recalls else 0.0
+
+
+def predicted_class_ids(out_words: jax.Array, n_rows: int) -> jax.Array:
+    """Decode packed output bits → int32[n_rows] class ids (for .predict)."""
+    from repro.core.encoding import unpack_words
+
+    bits = unpack_words(out_words, n_rows).astype(jnp.int32)  # (O, R)
+    weights = (1 << jnp.arange(bits.shape[0], dtype=jnp.int32))[:, None]
+    return (bits * weights).sum(axis=0)

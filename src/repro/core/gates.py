@@ -1,0 +1,100 @@
+"""Logic-gate function sets for Tiny Classifier circuits.
+
+The paper (§5.3, Fig. 8a) evaluates two function sets:
+  * ``Full FS``  = {AND, OR, NAND, NOR}
+  * ``NAND``     = {NAND}
+
+All gates here operate on *bit-packed* ``uint32`` words: one word carries 32
+dataset rows for a single logical signal, so a single ALU op evaluates a gate
+for 32 rows at once (DESIGN.md §3.1).  All gates are symmetric two-input
+functions (paper §3.1: "all considered functions are symmetric"), which is why
+mutation never needs input-shuffling.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+# Opcode table.  Order is load-bearing: genomes store indices into a function
+# set which maps to these opcodes.
+AND, OR, NAND, NOR, XOR, XNOR, NOT_A, BUF_A = range(8)
+
+GATE_NAMES = ("AND", "OR", "NAND", "NOR", "XOR", "XNOR", "NOT", "BUF")
+N_OPCODES = 8
+
+# Verilog expression templates per opcode (a, b are operand expressions).
+VERILOG_EXPR = (
+    "({a} & {b})",
+    "({a} | {b})",
+    "~({a} & {b})",
+    "~({a} | {b})",
+    "({a} ^ {b})",
+    "~({a} ^ {b})",
+    "~{a}",
+    "{a}",
+)
+
+# C expression templates (single-bit operands).
+C_EXPR = (
+    "({a} & {b})",
+    "({a} | {b})",
+    "(!({a} & {b}))",
+    "(!({a} | {b}))",
+    "({a} ^ {b})",
+    "(!({a} ^ {b}))",
+    "(!{a})",
+    "({a})",
+)
+
+# NAND2-equivalent gate count per opcode (standard-cell gate equivalents;
+# NAND2/NOR2 = 1.0, AND2/OR2 = 1.5 (gate + inverter), XOR2/XNOR2 = 2.5,
+# INV = 0.5, BUF = 0.5).  Used by repro.core.hardware.
+NAND2_EQUIV = (1.5, 1.5, 1.0, 1.0, 2.5, 2.5, 0.5, 0.5)
+
+# The paper's function sets.
+FULL_FS = (AND, OR, NAND, NOR)
+NAND_FS = (NAND,)
+EXTENDED_FS = (AND, OR, NAND, NOR, XOR, XNOR)  # beyond-paper option
+
+FUNCTION_SETS = {
+    "full": FULL_FS,
+    "nand": NAND_FS,
+    "extended": EXTENDED_FS,
+}
+
+
+def apply_gates_packed(opcodes, a, b):
+    """Apply per-node gate opcodes to packed uint32 operand words.
+
+    opcodes: int array broadcastable against a/b's leading dims — one opcode
+             per *gate*, shared across the trailing word axis.
+    a, b:    uint32 words (…, W).
+
+    Returns uint32 words of the same shape as ``a``.
+    """
+    a = a.astype(jnp.uint32)
+    b = b.astype(jnp.uint32)
+    ops = opcodes[..., None] if opcodes.ndim == a.ndim - 1 else opcodes
+    r = jnp.where(ops == AND, a & b, 0)
+    r = jnp.where(ops == OR, a | b, r)
+    r = jnp.where(ops == NAND, ~(a & b), r)
+    r = jnp.where(ops == NOR, ~(a | b), r)
+    r = jnp.where(ops == XOR, a ^ b, r)
+    r = jnp.where(ops == XNOR, ~(a ^ b), r)
+    r = jnp.where(ops == NOT_A, ~a, r)
+    r = jnp.where(ops == BUF_A, a, r)
+    return r.astype(jnp.uint32)
+
+
+def apply_gate_bool(opcode: int, a, b):
+    """Scalar boolean reference for a single opcode (python ints 0/1)."""
+    table = (
+        lambda x, y: x & y,
+        lambda x, y: x | y,
+        lambda x, y: 1 - (x & y),
+        lambda x, y: 1 - (x | y),
+        lambda x, y: x ^ y,
+        lambda x, y: 1 - (x ^ y),
+        lambda x, y: 1 - x,
+        lambda x, y: x,
+    )
+    return table[opcode](int(a), int(b))

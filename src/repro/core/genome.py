@@ -1,0 +1,135 @@
+"""Circuit genome representation for EGGP-style evolution (paper §3.1).
+
+A genome is a feed-forward sea-of-gates graph:
+
+  * ``I`` input nodes (ids ``0 … I-1``)   — one per encoded feature bit,
+  * ``n`` function nodes (ids ``I … I+n-1``) — each with an opcode and two
+    operand edges,
+  * ``O`` output nodes — each tapping any input/function node.
+
+Acyclicity: node ``i`` may only read ids ``< I + i`` (topological index
+space — the JAX-native adaptation of EGGP's explicit cycle check; see
+DESIGN.md §3.3: the representable function space is unchanged, only the
+mutation neighbourhood differs).
+
+Genomes are pytrees of arrays so they vmap/scan/shard transparently:
+population axes, island axes and sweep axes are all plain leading dims.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class CircuitSpec:
+    """Static description of the genome search space."""
+
+    n_inputs: int
+    n_nodes: int
+    n_outputs: int
+    fn_set: tuple[int, ...] = (0, 1, 2, 3)  # opcodes (gates.FULL_FS default)
+
+    def __post_init__(self):
+        assert self.n_inputs >= 1 and self.n_nodes >= 1 and self.n_outputs >= 1
+        assert len(self.fn_set) >= 1
+
+    @property
+    def n_edges(self) -> int:
+        """Total mutable edges E = 2n function-node edges + O output taps."""
+        return 2 * self.n_nodes + self.n_outputs
+
+    @property
+    def total_ids(self) -> int:
+        return self.n_inputs + self.n_nodes
+
+    def fn_table(self):
+        return jnp.asarray(self.fn_set, dtype=jnp.int32)
+
+
+class Genome(NamedTuple):
+    """Pytree of genome arrays.  ``gate_fn`` stores *indices into
+    spec.fn_set* (not raw opcodes) so node mutation can sample uniformly from
+    F \\ {current} with modular arithmetic."""
+
+    gate_fn: jax.Array   # int32[n]     index into spec.fn_set
+    edge_src: jax.Array  # int32[n, 2]  operand ids, edge_src[i] in [0, I+i)
+    out_src: jax.Array   # int32[O]     output taps in [0, I+n)
+
+    @property
+    def n_nodes(self) -> int:
+        return self.gate_fn.shape[-1]
+
+
+def opcodes(genome: Genome, spec: CircuitSpec) -> jax.Array:
+    """Map stored fn-set indices to raw gate opcodes."""
+    return spec.fn_table()[genome.gate_fn]
+
+
+def init_genome(key: jax.Array, spec: CircuitSpec) -> Genome:
+    """Random initialisation (paper §3.2): each node gets a uniform function
+    from F and operands drawn uniformly from the ids preceding it; each output
+    taps a uniform id."""
+    k_fn, k_edge, k_out = jax.random.split(key, 3)
+    n, im = spec.n_nodes, spec.n_inputs
+    gate_fn = jax.random.randint(k_fn, (n,), 0, len(spec.fn_set), dtype=jnp.int32)
+    # Valid operand range for node i is [0, I+i).
+    hi = im + jnp.arange(n, dtype=jnp.int32)  # exclusive upper bound per node
+    u = jax.random.uniform(k_edge, (n, 2))
+    edge_src = jnp.floor(u * hi[:, None]).astype(jnp.int32)
+    edge_src = jnp.minimum(edge_src, hi[:, None] - 1)
+    out_src = jax.random.randint(
+        k_out, (spec.n_outputs,), 0, im + n, dtype=jnp.int32
+    )
+    return Genome(gate_fn, edge_src, out_src)
+
+
+def genome_shape_dtypes(spec: CircuitSpec) -> Genome:
+    """ShapeDtypeStruct stand-in (for dry-run lowering)."""
+    sds = jax.ShapeDtypeStruct
+    return Genome(
+        gate_fn=sds((spec.n_nodes,), jnp.int32),
+        edge_src=sds((spec.n_nodes, 2), jnp.int32),
+        out_src=sds((spec.n_outputs,), jnp.int32),
+    )
+
+
+def validate_genome(genome: Genome, spec: CircuitSpec) -> bool:
+    """Host-side structural validation (used by property tests)."""
+    g = jax.tree.map(np.asarray, genome)
+    n, im, o = spec.n_nodes, spec.n_inputs, spec.n_outputs
+    if g.gate_fn.shape != (n,) or g.edge_src.shape != (n, 2):
+        return False
+    if g.out_src.shape != (o,):
+        return False
+    if not ((g.gate_fn >= 0).all() and (g.gate_fn < len(spec.fn_set)).all()):
+        return False
+    hi = im + np.arange(n)
+    if not ((g.edge_src >= 0).all() and (g.edge_src < hi[:, None]).all()):
+        return False
+    if not ((g.out_src >= 0).all() and (g.out_src < im + n).all()):
+        return False
+    return True
+
+
+def active_nodes(genome: Genome, spec: CircuitSpec) -> np.ndarray:
+    """Host-side mark-and-sweep of *active* function nodes (paper §3.1:
+    nodes with no path to an output are semantically inert — the neutral-drift
+    substrate).  Returns bool[n]."""
+    g = jax.tree.map(np.asarray, genome)
+    n, im = spec.n_nodes, spec.n_inputs
+    active = np.zeros(n, dtype=bool)
+    stack = [int(s) - im for s in g.out_src if int(s) >= im]
+    while stack:
+        i = stack.pop()
+        if active[i]:
+            continue
+        active[i] = True
+        for s in g.edge_src[i]:
+            if int(s) >= im:
+                stack.append(int(s) - im)
+    return active

@@ -1,0 +1,66 @@
+"""Point mutations (paper §3.2).
+
+The paper draws mutation counts from binomials B(n,p) / B(E,p) and applies
+them in shuffled order.  We apply i.i.d. Bernoulli(p) masks per locus — the
+number of mutated loci is exactly Binomial; see DESIGN.md §3.4 for the O(p²)
+equivalence argument.
+
+* Node mutation: replace the node's function with a uniform draw from
+  F \\ {current} (no-op when |F| == 1, e.g. the NAND-only set).
+* Edge mutation: redirect to a uniform valid source ≠ current.  Validity for
+  node i's operands is id < I+i (topological index space ⇒ acyclic by
+  construction); output taps may point anywhere.  When only one valid source
+  exists the mutation is abandoned (paper's special case I == 1).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.genome import CircuitSpec, Genome
+
+
+def _resample_excluding(key, lo_excl_hi: jax.Array, current: jax.Array):
+    """Uniform draw from [0, hi) \\ {current} where hi = lo_excl_hi (>=1).
+
+    Returns current unchanged where hi <= 1 (mutation abandoned).
+    """
+    hi = lo_excl_hi
+    u = jax.random.uniform(key, hi.shape)
+    r = jnp.floor(u * jnp.maximum(hi - 1, 1).astype(u.dtype)).astype(jnp.int32)
+    r = jnp.minimum(r, jnp.maximum(hi - 2, 0))
+    cand = r + (r >= current).astype(jnp.int32)
+    return jnp.where(hi > 1, cand, current)
+
+
+def mutate(key: jax.Array, genome: Genome, spec: CircuitSpec, p: float) -> Genome:
+    n, i_in, o = spec.n_nodes, spec.n_inputs, spec.n_outputs
+    n_fns = len(spec.fn_set)
+    k_fm, k_fv, k_em, k_ev, k_om, k_ov = jax.random.split(key, 6)
+
+    # --- node function mutations ---
+    gate_fn = genome.gate_fn
+    if n_fns > 1:
+        m = jax.random.bernoulli(k_fm, p, (n,))
+        off = jax.random.randint(k_fv, (n,), 1, n_fns, dtype=jnp.int32)
+        gate_fn = jnp.where(m, (gate_fn + off) % n_fns, gate_fn)
+
+    # --- function-node edge mutations ---
+    hi = (i_in + jnp.arange(n, dtype=jnp.int32))[:, None]  # (n,1) → (n,2)
+    m_e = jax.random.bernoulli(k_em, p, (n, 2))
+    new_e = _resample_excluding(k_ev, jnp.broadcast_to(hi, (n, 2)), genome.edge_src)
+    edge_src = jnp.where(m_e, new_e, genome.edge_src)
+
+    # --- output tap mutations ---
+    hi_o = jnp.full((o,), i_in + n, dtype=jnp.int32)
+    m_o = jax.random.bernoulli(k_om, p, (o,))
+    new_o = _resample_excluding(k_ov, hi_o, genome.out_src)
+    out_src = jnp.where(m_o, new_o, genome.out_src)
+
+    return Genome(gate_fn, edge_src, out_src)
+
+
+def mutate_children(key, genome, spec, p, lam: int) -> Genome:
+    """λ children, stacked on a leading axis (vmapped point mutation)."""
+    keys = jax.random.split(key, lam)
+    return jax.vmap(mutate, in_axes=(0, None, None, None))(keys, genome, spec, p)

@@ -1,0 +1,7 @@
+from repro.data.tabular import (  # noqa: F401
+    DATASETS,
+    TabularDataset,
+    kfold,
+    load_dataset,
+    train_test_split,
+)

@@ -1,0 +1,119 @@
+"""Pallas TPU kernel: bit-packed sea-of-gates circuit evaluation.
+
+This is the compute hot-spot of Auto Tiny Classifiers: every generation
+evaluates λ candidate circuits over the full training+validation set
+(population × rows × gates boolean ops).  TPU-native design (DESIGN.md §3):
+
+  * dataset rows are bit-packed 32/uint32 word; the word axis is the *lane*
+    axis (VPU-friendly, 128-word tiles) — one ALU op evaluates 32 rows;
+  * the genome (opcodes / edge list / output taps) drives control flow and
+    VMEM addressing, so it rides in SMEM via scalar prefetch;
+  * each grid cell materialises the (I+n)-signal node-value table for its
+    word block in a VMEM scratch buffer and walks the gates sequentially
+    (the circuit is a DAG in topological index order — node i only reads
+    signals < I+i, so a single forward sweep suffices);
+  * grid = (population, word-blocks): embarrassingly parallel, no reductions.
+
+VMEM footprint per cell: (I + n + O) × block_words × 4 B (+ the x block).
+For the paper's regime (I ≲ 6.5k bits, n = 300) a 512-word block is ≤ ~14 MB
+worst-case and ~0.8 MB for typical datasets; `ops.py` shrinks the block when
+the table would overflow VMEM.
+
+Validated in interpret mode against `ref.py` (tests/test_kernels.py sweeps
+shapes, function sets and dtypes).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core import gates
+
+LANE = 128  # TPU lane count; word blocks are multiples of this
+
+
+def _gate_select(op, a, b):
+    """Opcode-indexed gate on uint32 words (VPU select chain)."""
+    r = jnp.where(op == gates.AND, a & b, jnp.uint32(0))
+    r = jnp.where(op == gates.OR, a | b, r)
+    r = jnp.where(op == gates.NAND, ~(a & b), r)
+    r = jnp.where(op == gates.NOR, ~(a | b), r)
+    r = jnp.where(op == gates.XOR, a ^ b, r)
+    r = jnp.where(op == gates.XNOR, ~(a ^ b), r)
+    r = jnp.where(op == gates.NOT_A, ~a, r)
+    r = jnp.where(op == gates.BUF_A, a, r)
+    return r
+
+
+def _kernel(
+    # scalar-prefetch (SMEM):
+    opcodes_ref,   # i32[P, n]
+    edge_src_ref,  # i32[P, n, 2]
+    out_src_ref,   # i32[P, O]
+    # VMEM blocks:
+    x_ref,         # u32[I, BW]
+    o_ref,         # u32[1, O, BW]
+    # scratch:
+    vals_ref,      # u32[I+n, BW]
+):
+    p = pl.program_id(0)
+    n_in = x_ref.shape[0]
+    n_nodes = opcodes_ref.shape[1]
+    n_out = out_src_ref.shape[1]
+
+    # Seed the node-value table with the input bits.
+    vals_ref[:n_in, :] = x_ref[...]
+
+    def body(i, _):
+        a_idx = edge_src_ref[p, i, 0]
+        b_idx = edge_src_ref[p, i, 1]
+        op = opcodes_ref[p, i]
+        a = vals_ref[a_idx, :]
+        b = vals_ref[b_idx, :]
+        vals_ref[n_in + i, :] = _gate_select(op, a, b)
+        return 0
+
+    jax.lax.fori_loop(0, n_nodes, body, 0)
+
+    for j in range(n_out):  # O is small and static — unrolled taps
+        o_ref[0, j, :] = vals_ref[out_src_ref[p, j], :]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_words", "interpret")
+)
+def eval_population_kernel(
+    opcodes: jax.Array,   # i32[P, n]
+    edge_src: jax.Array,  # i32[P, n, 2]
+    out_src: jax.Array,   # i32[P, O]
+    x_words: jax.Array,   # u32[I, W]  (W must be a multiple of block_words)
+    *,
+    block_words: int = 512,
+    interpret: bool = False,
+) -> jax.Array:           # u32[P, O, W]
+    pop, n = opcodes.shape
+    n_in, w = x_words.shape
+    n_out = out_src.shape[1]
+    assert w % block_words == 0, (w, block_words)
+    grid = (pop, w // block_words)
+
+    return pl.pallas_call(
+        _kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=3,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((n_in, block_words), lambda p, wb, *_: (0, wb)),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, n_out, block_words), lambda p, wb, *_: (p, 0, wb)
+            ),
+            scratch_shapes=[pltpu.VMEM((n_in + n, block_words), jnp.uint32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((pop, n_out, w), jnp.uint32),
+        interpret=interpret,
+    )(opcodes, edge_src, out_src, x_words)

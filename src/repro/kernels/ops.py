@@ -1,0 +1,73 @@
+"""Jit'd public wrappers around the circuit-evaluation kernel.
+
+Dispatches between the Pallas TPU kernel (`circuit_eval.py`) and the pure-jnp
+oracle (`ref.py`).  On CPU (this container) the kernel runs in interpret mode;
+on TPU it compiles natively.  The wrapper pads the word axis to the kernel's
+lane-aligned block size and picks a block that keeps the VMEM node-value
+table within budget.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import circuit_eval, ref
+
+VMEM_BUDGET_BYTES = 12 * 1024 * 1024  # leave headroom out of ~16 MB/core
+
+
+def _on_tpu() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def pick_block_words(n_signals: int, w: int, lane: int = circuit_eval.LANE) -> int:
+    """Largest lane-multiple block whose (I+n)-row uint32 table fits VMEM."""
+    max_words = max(VMEM_BUDGET_BYTES // (4 * max(n_signals, 1)), lane)
+    block = (max_words // lane) * lane
+    block = min(block, 4 * lane)  # cap: 512 words = 16k rows per cell
+    # no point exceeding the (padded) word count itself
+    w_padded = ((w + lane - 1) // lane) * lane
+    return min(block, w_padded)
+
+
+def eval_population(
+    opcodes: jax.Array,   # i32[P, n]
+    edge_src: jax.Array,  # i32[P, n, 2]
+    out_src: jax.Array,   # i32[P, O]
+    x_words: jax.Array,   # u32[I, W]
+    *,
+    use_kernel: bool = False,
+    interpret: bool | None = None,
+) -> jax.Array:           # u32[P, O, W]
+    """Evaluate a population of circuits on a shared packed dataset."""
+    if not use_kernel:
+        return ref.eval_population_packed(opcodes, edge_src, out_src, x_words)
+
+    n_in, w = x_words.shape
+    n = opcodes.shape[1]
+    block = pick_block_words(n_in + n, w)
+    w_pad = ((w + block - 1) // block) * block
+    if w_pad != w:
+        x_words = jnp.pad(x_words, ((0, 0), (0, w_pad - w)))
+    out = circuit_eval.eval_population_kernel(
+        opcodes.astype(jnp.int32),
+        edge_src.astype(jnp.int32),
+        out_src.astype(jnp.int32),
+        x_words.astype(jnp.uint32),
+        block_words=block,
+        interpret=(not _on_tpu()) if interpret is None else interpret,
+    )
+    return out[..., :w]
+
+
+def eval_circuit(
+    opcodes, edge_src, out_src, x_words, *, use_kernel: bool = False, interpret=None
+) -> jax.Array:
+    """Single-circuit convenience wrapper → u32[O, W]."""
+    out = eval_population(
+        opcodes[None], edge_src[None], out_src[None], x_words,
+        use_kernel=use_kernel, interpret=interpret,
+    )
+    return out[0]

@@ -1,0 +1,64 @@
+"""Pure-jnp oracle for bit-packed circuit evaluation.
+
+This is the reference implementation the Pallas kernel
+(`repro.kernels.circuit_eval`) is validated against (assert_allclose in
+tests/test_kernels.py over shape/dtype sweeps).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import gates
+
+
+def eval_circuit_packed(
+    opcodes: jax.Array,   # int32[n]    raw gate opcodes
+    edge_src: jax.Array,  # int32[n,2]  operand ids, < I+i for node i
+    out_src: jax.Array,   # int32[O]    output taps, < I+n
+    x_words: jax.Array,   # uint32[I,W] packed input bits
+) -> jax.Array:           # uint32[O,W] packed output bits
+    """Evaluate one circuit on all packed rows."""
+    n = opcodes.shape[0]
+    i_in, w = x_words.shape
+    vals = jnp.concatenate(
+        [x_words.astype(jnp.uint32), jnp.zeros((n, w), jnp.uint32)], axis=0
+    )
+
+    def body(i, vals):
+        a = vals[edge_src[i, 0]]
+        b = vals[edge_src[i, 1]]
+        r = gates.apply_gates_packed(opcodes[i], a, b)
+        return jax.lax.dynamic_update_slice(vals, r[None], (i_in + i, 0))
+
+    vals = jax.lax.fori_loop(0, n, body, vals)
+    return vals[out_src]
+
+
+def eval_population_packed(opcodes, edge_src, out_src, x_words):
+    """vmap over a leading population axis on the genome arrays; the packed
+    dataset is shared."""
+    return jax.vmap(eval_circuit_packed, in_axes=(0, 0, 0, None))(
+        opcodes, edge_src, out_src, x_words
+    )
+
+
+def eval_circuit_rows(opcodes, edge_src, out_src, x_bits):
+    """Unpacked row-wise reference (uint8[R, I] → uint8[R, O]).
+
+    Slow O(R·n) path used only by tests to validate the packed layout itself.
+    """
+    n = opcodes.shape[0]
+    r, i_in = x_bits.shape
+    vals = jnp.concatenate(
+        [x_bits.astype(jnp.uint32).T, jnp.zeros((n, r), jnp.uint32)], axis=0
+    )
+
+    def body(i, vals):
+        a = vals[edge_src[i, 0]]
+        b = vals[edge_src[i, 1]]
+        out = gates.apply_gates_packed(opcodes[i], a, b) & jnp.uint32(1)
+        return jax.lax.dynamic_update_slice(vals, out[None], (i_in + i, 0))
+
+    vals = jax.lax.fori_loop(0, n, body, vals)
+    return vals[out_src].T.astype(jnp.uint8)

@@ -1,0 +1,340 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the very first lines, before ANY other import — jax locks the
+#   device count on first init.  (The docstring therefore lives below.)
+
+"""Multi-pod dry-run driver (deliverable e).
+
+For every (architecture × input-shape × mesh) cell:
+    with mesh:
+        lowered  = jax.jit(step, in_shardings=…, out_shardings=…).lower(*specs)
+        compiled = lowered.compile()
+        memory_analysis() / cost_analysis() / collective parse
+and writes one JSON record per cell under experiments/dryrun/<mesh>/.
+
+The two XLA_FLAGS lines above MUST precede any other import — jax locks the
+device count at first init.  This file is the only place the 512 fake
+devices exist; tests and benchmarks see the real single CPU device.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch granite-moe-1b-a400m \
+        --shape train_4k --mesh single
+    PYTHONPATH=src python -m repro.launch.dryrun --all --mesh both
+    PYTHONPATH=src python -m repro.launch.dryrun --arch autotc --mesh multi
+"""
+
+
+import argparse
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, SHAPES, applicable, get_config, input_specs
+from repro.launch.mesh import make_production_mesh
+from repro.models import lm
+from repro.models.common import ModelConfig
+from repro.sharding.params import (
+    batch_specs,
+    param_specs,
+    train_state_specs,
+    tree_shardings,
+)
+from repro.sharding.specs import MeshAxes, use_mesh_axes
+from repro.train.optimizer import OptConfig
+from repro.train.train_step import make_train_step, train_state_shapes
+from repro.utils.hlo import collective_stats
+
+OUT_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                       "experiments", "dryrun")
+
+# TPU v5e hardware constants (§Roofline)
+PEAK_FLOPS = 197e12      # bf16 FLOP/s per chip
+HBM_BW = 819e9           # B/s per chip
+ICI_BW = 50e9            # B/s per link
+
+
+def _mem_dict(compiled) -> dict:
+    out = {}
+    try:
+        ma = compiled.memory_analysis()
+        for attr in (
+            "argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "alias_size_in_bytes",
+            "generated_code_size_in_bytes",
+        ):
+            v = getattr(ma, attr, None)
+            if v is not None:
+                out[attr] = int(v)
+    except Exception as e:  # noqa: BLE001
+        out["error"] = repr(e)
+    return out
+
+
+def _cost_dict(compiled) -> dict:
+    out = {}
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        for k, v in dict(ca).items():
+            if isinstance(v, (int, float)) and (
+                k in ("flops", "transcendentals", "bytes accessed")
+                or k.startswith("bytes accessed")
+            ):
+                out[k] = float(v)
+    except Exception as e:  # noqa: BLE001
+        out["error"] = repr(e)
+    return out
+
+
+def build_lowerable(cfg: ModelConfig, shape_name: str, mesh):
+    """→ (fn, example_args (ShapeDtypeStructs), in_shardings, out_shardings,
+    donate_argnums)."""
+    shape = SHAPES[shape_name]
+    axes = MeshAxes.for_mesh(mesh)
+    specs = input_specs(cfg, shape)
+
+    if shape.kind == "train":
+        opt_cfg = OptConfig(kind=cfg.optimizer)
+        state_sds = train_state_shapes(cfg, opt_cfg)
+        state_sh = tree_shardings(
+            mesh, state_sds, train_state_specs(cfg, axes, opt_cfg.kind)
+        )
+        batch_sh = tree_shardings(
+            mesh, specs, {k: batch_specs(cfg, axes, "train")[k] for k in specs}
+        )
+        step = make_train_step(
+            cfg, opt_cfg, microbatches=cfg.train_microbatches,
+            grad_shardings=state_sh.params,
+        )
+        fn = jax.jit(
+            step,
+            in_shardings=(state_sh, batch_sh),
+            out_shardings=(state_sh, None),
+            donate_argnums=(0,),
+        )
+        return fn, (state_sds, specs)
+
+    params_sds = lm.param_shapes(cfg)
+    params_sh = tree_shardings(mesh, params_sds, param_specs(cfg, axes))
+
+    if shape.kind == "prefill":
+        batch_sh = tree_shardings(
+            mesh, specs,
+            {k: batch_specs(cfg, axes, "prefill")[k] for k in specs},
+        )
+
+        def prefill_fn(params, batch):
+            return lm.prefill(params, cfg, **batch)
+
+        fn = jax.jit(
+            prefill_fn, in_shardings=(params_sh, batch_sh),
+        )
+        return fn, (params_sds, specs)
+
+    # decode: one token against a seq_len cache
+    cache_sds = jax.eval_shape(
+        lambda: lm.init_cache(cfg, shape.global_batch, shape.seq_len)
+    )
+    cache_sh = tree_shardings(
+        mesh, cache_sds,
+        {**lm.cache_specs(cfg, axes), "pos": P()},
+    )
+    batch_sh = tree_shardings(
+        mesh, specs, {k: batch_specs(cfg, axes, "decode")[k] for k in specs}
+    )
+
+    def decode_fn(params, cache, batch):
+        return lm.decode_step(params, cfg, cache, **batch)
+
+    fn = jax.jit(
+        decode_fn,
+        in_shardings=(params_sh, cache_sh, batch_sh),
+        out_shardings=(None, cache_sh),
+        donate_argnums=(1,),
+    )
+    return fn, (params_sds, cache_sds, specs)
+
+
+def run_cell(arch: str, shape_name: str, mesh, mesh_name: str,
+             out_dir: str, force: bool = False) -> dict:
+    os.makedirs(os.path.join(out_dir, mesh_name), exist_ok=True)
+    path = os.path.join(out_dir, mesh_name, f"{arch}__{shape_name}.json")
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+
+    rec: dict = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_name,
+        "n_devices": mesh.size,
+    }
+    if arch == "autotc":
+        rec.update(_run_autotc(shape_name, mesh))
+    else:
+        cfg = get_config(arch)
+        shape = SHAPES[shape_name]
+        ok, why = applicable(cfg, shape)
+        if not ok:
+            rec.update({"status": "skipped", "reason": why})
+            _write(path, rec)
+            return rec
+        rec["params"] = cfg.n_params()
+        rec["active_params"] = cfg.active_params()
+        try:
+            t0 = time.time()
+            fn, args = build_lowerable(cfg, shape_name, mesh)
+            with mesh, use_mesh_axes(mesh):
+                lowered = fn.lower(*args)
+                t_lower = time.time() - t0
+                t0 = time.time()
+                compiled = lowered.compile()
+                t_compile = time.time() - t0
+            hlo = compiled.as_text()
+            rec.update({
+                "status": "ok",
+                "lower_s": round(t_lower, 2),
+                "compile_s": round(t_compile, 2),
+                "memory": _mem_dict(compiled),
+                "cost": _cost_dict(compiled),
+                "collectives": collective_stats(hlo),
+                "tokens": SHAPES[shape_name].global_batch
+                * (SHAPES[shape_name].seq_len
+                   if SHAPES[shape_name].kind != "decode" else 1),
+                "kind": SHAPES[shape_name].kind,
+            })
+        except Exception as e:  # noqa: BLE001
+            rec.update({
+                "status": "error",
+                "error": repr(e),
+                "traceback": traceback.format_exc()[-4000:],
+            })
+    _write(path, rec)
+    return rec
+
+
+def _run_autotc(shape_name: str, mesh) -> dict:
+    """Dry-run one island-evolution cell of the paper's technique itself."""
+    from repro.core import gates
+    from repro.core.encoding import PackedDataset
+    from repro.core.evolve import EvolveConfig
+    from repro.core.genome import CircuitSpec
+    from repro.core.islands import IslandConfig, evolve_islands
+
+    # shape_name encodes the dataset scale: autotc_<rows>k_<bits>
+    rows_k = {"tab_small": 64, "tab_large": 1024}.get(shape_name, 64)
+    n_rows = rows_k * 1024
+    n_inputs, n_out, n_cls = 128, 2, 4
+    w = n_rows // 32
+    data_axes = ("pod", "data") if "pod" in mesh.axis_names else ("data",)
+    dshard = 1
+    for a in data_axes:
+        dshard *= mesh.shape[a]
+    w = -(-w // dshard) * dshard
+    sds = jax.ShapeDtypeStruct
+    data = PackedDataset(
+        x_words=sds((n_inputs, w), jnp.uint32),
+        y_words=sds((n_out, w), jnp.uint32),
+        class_words=sds((n_cls, w), jnp.uint32),
+        mask_words=sds((w,), jnp.uint32),
+    )
+    masks = sds((w,), jnp.uint32)
+    spec = CircuitSpec(n_inputs, 300, n_out, gates.FULL_FS)
+    cfg = EvolveConfig(lam=4, kappa=300, max_gens=8000)
+    icfg = IslandConfig(
+        migrate_every=32, island_axis="model", data_axes=data_axes
+    )
+    n_isl = mesh.shape["model"]
+    keys = jax.eval_shape(
+        lambda: jax.random.split(jax.random.key(0), n_isl)
+    )
+    fn = jax.jit(
+        lambda k, d, mt, mv: evolve_islands(
+            k, spec, cfg, icfg, d, mt, mv, mesh
+        )
+    )
+    t0 = time.time()
+    lowered = fn.lower(keys, data, masks, masks)
+    t_lower = time.time() - t0
+    t0 = time.time()
+    compiled = lowered.compile()
+    t_compile = time.time() - t0
+    hlo = compiled.as_text()
+    return {
+        "status": "ok",
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory": _mem_dict(compiled),
+        "cost": _cost_dict(compiled),
+        "collectives": collective_stats(hlo),
+        "kind": "evolve",
+        "rows": n_rows,
+    }
+
+
+def _write(path: str, rec: dict):
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None,
+                    help="arch id, 'autotc', or omit with --all")
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", choices=("single", "multi", "both"),
+                    default="single")
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--out", default=None)
+    args = ap.parse_args()
+
+    out_dir = args.out or os.path.abspath(OUT_DIR)
+    meshes = []
+    if args.mesh in ("single", "both"):
+        meshes.append(("single_pod_16x16", make_production_mesh()))
+    if args.mesh in ("multi", "both"):
+        meshes.append(("multi_pod_2x16x16", make_production_mesh(multi_pod=True)))
+
+    if args.all:
+        cells = [(a, s) for a in ARCH_IDS for s in SHAPES]
+        cells += [("autotc", "tab_small"), ("autotc", "tab_large")]
+    else:
+        assert args.arch, "--arch or --all required"
+        shapes = [args.shape] if args.shape else (
+            ["tab_small", "tab_large"] if args.arch == "autotc"
+            else list(SHAPES)
+        )
+        cells = [(args.arch, s) for s in shapes]
+
+    n_ok = n_skip = n_err = 0
+    for mesh_name, mesh in meshes:
+        for arch, shape in cells:
+            t0 = time.time()
+            rec = run_cell(arch, shape, mesh, mesh_name, out_dir, args.force)
+            status = rec.get("status")
+            n_ok += status == "ok"
+            n_skip += status == "skipped"
+            n_err += status == "error"
+            extra = ""
+            if status == "ok":
+                mem = rec.get("memory", {})
+                arg_gb = mem.get("argument_size_in_bytes", 0) / 2**30
+                tmp_gb = mem.get("temp_size_in_bytes", 0) / 2**30
+                extra = (f"args/dev={arg_gb:.2f}GiB tmp/dev={tmp_gb:.2f}GiB "
+                         f"compile={rec.get('compile_s')}s")
+            elif status == "error":
+                extra = rec.get("error", "")[:200]
+            else:
+                extra = rec.get("reason", "")[:80]
+            print(f"[{mesh_name}] {arch} × {shape}: {status} {extra} "
+                  f"({time.time()-t0:.0f}s)", flush=True)
+    print(f"done: ok={n_ok} skipped={n_skip} error={n_err}")
+    return 1 if n_err else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

@@ -1,0 +1,1 @@
+from repro.models.common import ModelConfig, MoEConfig, SSMConfig  # noqa: F401

@@ -1,0 +1,176 @@
+"""GQA attention: direct, chunked-flash (online softmax), and decode paths.
+
+The chunked path bounds the score working set to
+(B, Hkv, G, chunk_q, chunk_kv) per scan step — mandatory for the 32k-prefill
+and 4k-train shapes to fit HBM (the full 32k×32k score tensor would be TBs).
+Causal/sliding masks are applied per chunk pair; blocks that a causal skip
+would eliminate are still computed-and-masked (scan cannot skip dynamically)
+— the roofline's MODEL_FLOPS/HLO_FLOPs ratio surfaces this and §Perf
+addresses it.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _mask(pos_q, pos_k, causal: bool, window: int | None):
+    """(…, cq, ckv) bool mask from absolute positions."""
+    d = pos_q[..., :, None] - pos_k[..., None, :]
+    m = jnp.ones(d.shape, bool)
+    if causal:
+        m &= d >= 0
+    if window is not None:
+        m &= d < window
+    return m
+
+
+def gqa_attention_direct(
+    q: jax.Array,  # (B, Sq, Hq, hd)
+    k: jax.Array,  # (B, Skv, Hkv, hd)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    kv_valid_len: jax.Array | None = None,  # mask kv positions >= this
+) -> jax.Array:
+    b, sq, hq, hd = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    qg = q.reshape(b, sq, hkv, g, hd)
+    s = jnp.einsum("bqkgd,btkd->bkgqt", qg, k).astype(jnp.float32)
+    s *= 1.0 / math.sqrt(hd)
+    pos_q = q_offset + jnp.arange(sq)
+    pos_k = jnp.arange(skv)
+    m = _mask(pos_q, pos_k, causal, window)
+    if kv_valid_len is not None:
+        m &= (pos_k < kv_valid_len)[None, :] if jnp.ndim(kv_valid_len) == 0 \
+            else (pos_k[None, :] < kv_valid_len[:, None])[:, None, :]
+    s = jnp.where(m, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqt,btkd->bqkgd", p.astype(v.dtype), v)
+    return o.reshape(b, sq, hq, hd)
+
+
+def gqa_attention_chunked(
+    q: jax.Array,  # (B, Sq, Hq, hd)
+    k: jax.Array,  # (B, Skv, Hkv, hd)
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int | None = None,
+    q_offset: int = 0,
+    chunk_q: int = 512,
+    chunk_kv: int = 1024,
+) -> jax.Array:
+    b, sq, hq, hd = q.shape
+    _, skv, hkv, _ = k.shape
+    g = hq // hkv
+    cq = min(chunk_q, sq)
+    ckv = min(chunk_kv, skv)
+    if sq % cq or skv % ckv:
+        # small/odd shapes (smoke tests) fall back to the direct path
+        return gqa_attention_direct(
+            q, k, v, causal=causal, window=window, q_offset=q_offset
+        )
+    nq, nk = sq // cq, skv // ckv
+    scale = 1.0 / math.sqrt(hd)
+
+    qs = q.reshape(b, nq, cq, hkv, g, hd).transpose(1, 0, 2, 3, 4, 5)
+    ks = k.reshape(b, nk, ckv, hkv, hd).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(b, nk, ckv, hkv, hd).transpose(1, 0, 2, 3, 4)
+
+    def q_block(_, qi_qc):
+        qi, qc = qi_qc  # qc: (B, cq, Hkv, G, hd)
+        pos_q = q_offset + qi * cq + jnp.arange(cq)
+
+        def kv_block_inner(carry, kj_kc_vc):
+            m_run, l_run, acc = carry
+            kj, kc, vc = kj_kc_vc
+            pos_k = kj * ckv + jnp.arange(ckv)
+            s = jnp.einsum("bqkgd,btkd->bkgqt", qc, kc).astype(jnp.float32)
+            s = s * scale
+            msk = _mask(pos_q, pos_k, causal, window)  # (cq, ckv)
+            s = jnp.where(msk[None, None, None], s, NEG_INF)
+            m_new = jnp.maximum(m_run, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m_run - m_new)
+            l_new = l_run * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bkgqt,btkd->bkgqd", p.astype(vc.dtype), vc)
+            acc = acc * corr[..., None].astype(acc.dtype) + pv
+            return (m_new, l_new, acc), None
+
+        # flash-style memory discipline in the backward too: recompute the
+        # (cq, ckv) score/probability blocks instead of saving them — the
+        # saved-p stacks were 12.5 GiB/device/layer for the archs whose head
+        # counts don't divide tp (EXPERIMENTS.md §Perf iteration 3).
+        kv_block = jax.checkpoint(
+            kv_block_inner,
+            policy=jax.checkpoint_policies.nothing_saveable,
+        )
+        m0 = jnp.full((b, hkv, g, cq), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, hkv, g, cq), jnp.float32)
+        a0 = jnp.zeros((b, hkv, g, cq, hd), v.dtype)
+        (m_f, l_f, acc), _ = jax.lax.scan(
+            kv_block, (m0, l0, a0), (jnp.arange(nk), ks, vs)
+        )
+        out = acc / jnp.maximum(l_f, 1e-20)[..., None].astype(acc.dtype)
+        # (B, Hkv, G, cq, hd) → (B, cq, Hq, hd)
+        out = out.transpose(0, 3, 1, 2, 4).reshape(b, cq, hq, hd)
+        return None, out
+
+    q_block_ck = jax.checkpoint(
+        q_block, policy=jax.checkpoint_policies.nothing_saveable
+    )
+    _, outs = jax.lax.scan(q_block_ck, None, (jnp.arange(nq), qs))
+    # (nq, B, cq, Hq, hd) → (B, Sq, Hq, hd)
+    return outs.transpose(1, 0, 2, 3, 4).reshape(b, sq, hq, hd)
+
+
+def gqa_attention(
+    q, k, v, *, causal=True, window=None, q_offset=0,
+    chunk_q=256, chunk_kv=512, force_direct=False,
+):
+    """Dispatch: direct for short sequences, chunked-flash for long."""
+    if force_direct or q.shape[1] * k.shape[1] <= 1024 * 1024:
+        return gqa_attention_direct(
+            q, k, v, causal=causal, window=window, q_offset=q_offset
+        )
+    return gqa_attention_chunked(
+        q, k, v, causal=causal, window=window, q_offset=q_offset,
+        chunk_q=chunk_q, chunk_kv=chunk_kv,
+    )
+
+
+def decode_attention(
+    q: jax.Array,        # (B, 1, Hq, hd)
+    k_cache: jax.Array,  # (B, T, Hkv, hd)
+    v_cache: jax.Array,
+    pos: jax.Array,      # scalar int32 — index of the *current* token
+    *,
+    window: int | None = None,
+    ring: bool = False,  # cache is a ring buffer of size T (sliding layers)
+) -> jax.Array:
+    b, t, hkv, hd = k_cache.shape
+    hq = q.shape[2]
+    g = hq // hkv
+    qg = q.reshape(b, 1, hkv, g, hd)
+    s = jnp.einsum("bqkgd,btkd->bkgqt", qg, k_cache).astype(jnp.float32)
+    s *= 1.0 / math.sqrt(hd)
+    slots = jnp.arange(t)
+    if ring:
+        valid = slots <= pos  # until wrap everything ≤ pos; post-wrap all valid
+        valid = valid | (pos >= t)
+    else:
+        valid = slots <= pos
+        if window is not None:
+            valid &= slots > pos - window
+    s = jnp.where(valid[None, None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgqt,btkd->bqkgd", p.astype(v_cache.dtype), v_cache)
+    return o.reshape(b, 1, hq, hd)

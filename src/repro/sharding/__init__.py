@@ -1,0 +1,8 @@
+from repro.sharding.specs import (  # noqa: F401
+    MeshAxes,
+    constrain,
+    logical,
+    maybe_constrain,
+    spec_for,
+    use_mesh_axes,
+)

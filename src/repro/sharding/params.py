@@ -1,0 +1,157 @@
+"""Parameter / optimizer / batch / cache sharding trees (DESIGN.md §6).
+
+Rules (fsdp = ("pod","data") or ("data",); tp = "model"):
+  * weights: d_model → fsdp (ZeRO-3/FSDP), heads·hd and d_ff → tp
+    (Megatron column/row), experts → tp (expert parallelism), vocab → tp;
+  * every spec is *fitted* per-array: a mesh axis that does not divide the
+    dim is dropped (e.g. 36 heads on tp=16 → attention dims fall back to
+    GSPMD propagation — see EXPERIMENTS.md §Roofline for the measured cost).
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.common import ModelConfig
+from repro.sharding.specs import MeshAxes
+from repro.train.optimizer import Q8, OptState
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        return math.prod(mesh.shape[a] for a in entry)
+    return mesh.shape[entry]
+
+
+def fit(mesh: Mesh, spec: P, shape: tuple[int, ...]) -> P:
+    """Drop spec entries whose mesh-axis size does not divide the dim."""
+    entries = list(spec) + [None] * (len(shape) - len(spec))
+    out = []
+    for dim, entry in zip(shape, entries):
+        size = _axis_size(mesh, entry)
+        out.append(entry if size > 1 and dim % size == 0 else None)
+    return P(*out)
+
+
+def tree_shardings(mesh: Mesh, shapes_tree, specs_tree):
+    """Zip a ShapeDtypeStruct tree with a spec tree → NamedSharding tree,
+    fitting every spec to its array shape."""
+    def one(sds, spec):
+        return NamedSharding(mesh, fit(mesh, spec, tuple(sds.shape)))
+
+    return jax.tree.map(one, shapes_tree, specs_tree)
+
+
+# ---------------------------------------------------------------------------
+# Parameter specs (mirrors lm.init_params / blocks.init_block_params)
+# ---------------------------------------------------------------------------
+
+def block_param_specs(cfg: ModelConfig, axes: MeshAxes) -> dict:
+    f, t = axes.fsdp, axes.tp
+    p: dict = {"ln1": P(None, None), "ln2": P(None, None)}
+    if cfg.block_kind in ("attn", "hybrid"):
+        p["wq"] = P(None, f, t)
+        p["wk"] = P(None, f, t)
+        p["wv"] = P(None, f, t)
+        p["wo"] = P(None, t, f)
+    if cfg.block_kind == "rwkv":
+        p["mu"] = P(None, None, None)
+        for nm in ("wr", "wk_t", "wv_t", "wg_t"):
+            p[nm] = P(None, f, t)
+        p["wo_t"] = P(None, t, f)
+        p["w0"] = P(None, None)
+        p["wlA"] = P(None, f, None)
+        p["wlB"] = P(None, None, f)
+        p["u"] = P(None, None, None)
+        p["ln_x"] = P(None, None)
+        p["mu_ck"] = P(None, None)
+        p["mu_cr"] = P(None, None)
+        p["c_wk"] = P(None, f, t)
+        p["c_wv"] = P(None, t, f)
+        p["c_wr"] = P(None, f, t)
+        return p
+    if cfg.block_kind == "hybrid" and cfg.ssm is not None:
+        p["m_in"] = P(None, f, t)
+        p["m_conv"] = P(None, t, None)
+        p["m_Alog"] = P(None, t, None)
+        p["m_x"] = P(None, t, None)
+        p["m_dtw"] = P(None, None, t)
+        p["m_dtb"] = P(None, t)
+        p["m_D"] = P(None, t)
+        p["m_out"] = P(None, t, f)
+    if cfg.moe is not None:
+        p["router"] = P(None, f, None)
+        p["e_wg"] = P(None, t, f, None)
+        p["e_wu"] = P(None, t, f, None)
+        p["e_wd"] = P(None, t, None, f)
+    if cfg.moe is None or cfg.moe.dense_residual:
+        if cfg.act == "swiglu":
+            p["wg_f"] = P(None, f, t)
+        p["wu_f"] = P(None, f, t)
+        p["wd_f"] = P(None, t, f)
+    return p
+
+
+def param_specs(cfg: ModelConfig, axes: MeshAxes) -> dict:
+    f, t = axes.fsdp, axes.tp
+    p = {
+        "embed": P(t, f),
+        "blocks": block_param_specs(cfg, axes),
+        "ln_f": P(None),
+    }
+    if not cfg.tie_embeddings:
+        p["head"] = P(f, t)
+    return p
+
+
+def opt_state_specs(pspecs, kind: str, axes: MeshAxes | None = None) -> OptState:
+    """Optimizer-state specs mirroring the param tree."""
+    if kind == "adam8bit":
+        # Q8 moments live in the parameter's own shape: q shards exactly
+        # like the param; the per-block scale inherits the same spec and
+        # `fit()` drops the last-dim axis when n_blocks doesn't divide.
+        def q8spec(ps: P) -> Q8:
+            return Q8(q=ps, scale=ps)
+
+        m = jax.tree.map(q8spec, pspecs,
+                         is_leaf=lambda x: isinstance(x, P))
+        v = jax.tree.map(q8spec, pspecs,
+                         is_leaf=lambda x: isinstance(x, P))
+    else:
+        m = pspecs
+        v = jax.tree.map(lambda s: s, pspecs,
+                         is_leaf=lambda x: isinstance(x, P))
+    return OptState(step=P(), m=m, v=v)
+
+
+def train_state_specs(cfg: ModelConfig, axes: MeshAxes, opt_kind: str):
+    from repro.train.train_step import TrainState
+
+    ps = param_specs(cfg, axes)
+    return TrainState(
+        params=ps, opt=opt_state_specs(ps, opt_kind, axes), step=P()
+    )
+
+
+def batch_specs(cfg: ModelConfig, axes: MeshAxes, kind: str) -> dict:
+    f = axes.fsdp
+    s: dict = {}
+    if kind in ("train", "prefill"):
+        if cfg.frontend is not None:
+            s["embeds"] = P(f, None, None)
+        else:
+            s["tokens"] = P(f, None)
+        if kind == "train":
+            s["labels"] = P(f, None)
+        if cfg.rope_kind == "mrope":
+            s["positions"] = P(f, None, None)
+    else:
+        if cfg.frontend is not None:
+            s["embed"] = P(f, None, None)
+        else:
+            s["token"] = P(f, None)
+    return s

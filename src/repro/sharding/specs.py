@@ -1,0 +1,169 @@
+"""Sharding rules: logical axes → mesh axes (DESIGN.md §6).
+
+Production meshes (launch/mesh.py):
+  * single-pod: (16, 16)  axes ("data", "model")
+  * multi-pod:  (2, 16, 16) axes ("pod", "data", "model")
+
+Policy: fsdp = ("pod","data") (or ("data",)), tp = "model".
+  * batch / tokens         → fsdp
+  * d_model of weights     → fsdp       (FSDP / ZeRO-3 style)
+  * heads·head_dim, d_ff   → tp         (Megatron column/row parallel)
+  * experts                → tp         (expert parallelism)
+  * vocab                  → tp
+
+`maybe_constrain` applies `with_sharding_constraint` only when every sharded
+dim divides the mesh axes — architectures whose head counts are not
+16-divisible (starcoder2 36H, arctic 56H, qwen2-vl 28H, musicgen 24H,
+hymba 25H) leave those activations to GSPMD propagation instead of forcing
+an invalid spec.  The dry-run roofline shows the cost of that choice per
+arch; hillclimbs in EXPERIMENTS.md §Perf act on it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import jax
+from jax.sharding import Mesh, PartitionSpec as P
+
+
+@dataclasses.dataclass(frozen=True)
+class MeshAxes:
+    fsdp: tuple[str, ...]
+    tp: str
+
+    @staticmethod
+    def for_mesh(mesh: Mesh) -> "MeshAxes":
+        names = tuple(mesh.axis_names)
+        if "pod" in names:
+            return MeshAxes(fsdp=("pod", "data"), tp="model")
+        return MeshAxes(fsdp=("data",), tp="model")
+
+
+# Logical axis vocabulary used by the model code.
+#   "batch", "seq", "embed", "heads", "kv_heads", "head_dim", "ff",
+#   "experts", "vocab", "layers", "state"
+def logical(axes: MeshAxes) -> dict[str, object]:
+    return {
+        "batch": axes.fsdp,
+        "seq": None,
+        "embed": axes.fsdp,
+        "embed_tp": axes.tp,      # alternate: shard embed over tp (lm head in)
+        "heads": axes.tp,
+        "kv_heads": None,          # replicated across tp (n_kv < tp in general)
+        "head_dim": None,
+        "ff": axes.tp,
+        "experts": axes.tp,
+        "vocab": axes.tp,
+        "layers": None,
+        "state": None,
+        None: None,
+    }
+
+
+def spec_for(axes: MeshAxes, *names: str | None) -> P:
+    table = logical(axes)
+    return P(*[table[n] for n in names])
+
+
+def _axis_size(mesh: Mesh, entry) -> int:
+    if entry is None:
+        return 1
+    if isinstance(entry, (tuple, list)):
+        return math.prod(mesh.shape[a] for a in entry)
+    return mesh.shape[entry]
+
+
+def divisible(mesh: Mesh, shape: tuple[int, ...], spec: P) -> bool:
+    for dim, entry in zip(shape, tuple(spec) + (None,) * (len(shape) - len(spec))):
+        size = _axis_size(mesh, entry)
+        if size > 1 and dim % size != 0:
+            return False
+    return True
+
+
+def maybe_constrain(x: jax.Array, mesh: Mesh, spec: P) -> jax.Array:
+    """with_sharding_constraint iff the spec divides; no-op otherwise."""
+    if mesh is None:
+        return x
+    if divisible(mesh, x.shape, spec):
+        return jax.lax.with_sharding_constraint(
+            x, jax.sharding.NamedSharding(mesh, spec)
+        )
+    return x
+
+
+# ---------------------------------------------------------------------------
+# Ambient mesh context — model code calls constrain(x, *logical_names) and is
+# a no-op outside a mesh context (smoke tests, single device).
+# ---------------------------------------------------------------------------
+
+import contextlib
+import threading
+
+_TLS = threading.local()
+
+
+@contextlib.contextmanager
+def use_mesh_axes(mesh: Mesh):
+    prev = getattr(_TLS, "ctx", None)
+    _TLS.ctx = (mesh, MeshAxes.for_mesh(mesh))
+    try:
+        yield
+    finally:
+        _TLS.ctx = prev
+
+
+def current_mesh() -> tuple[Mesh, MeshAxes] | None:
+    return getattr(_TLS, "ctx", None)
+
+
+def constrain(x: jax.Array, *names: str | None) -> jax.Array:
+    ctx = current_mesh()
+    if ctx is None:
+        return x
+    mesh, axes = ctx
+    return maybe_constrain(x, mesh, spec_for(axes, *names))
+
+
+def constrain_spec(x: jax.Array, spec: P) -> jax.Array:
+    """Constrain to an explicit PartitionSpec under the ambient mesh."""
+    ctx = current_mesh()
+    if ctx is None:
+        return x
+    mesh, _axes = ctx
+    return maybe_constrain(x, mesh, spec)
+
+
+def constrain_kv_collect(k: jax.Array, v: jax.Array):
+    """Pin collected prefill KV (B, S, Hkv, hd) to (batch→fsdp, seq→tp) —
+    matches the decode cache layout, so the prefill KV stack shards 256-way
+    instead of 16-way (kv_heads < tp cannot shard the head dim)."""
+    ctx = current_mesh()
+    if ctx is None:
+        return k, v
+    mesh, axes = ctx
+    spec = P(axes.fsdp, axes.tp, None, None)
+    return (maybe_constrain(k, mesh, spec), maybe_constrain(v, mesh, spec))
+
+
+def constrain_layer_params(lp: dict, cfg) -> dict:
+    """Pin a scanned layer's parameter slices to their sharded specs inside
+    the scan body — keeps XLA from hoisting whole-stack all-gathers out of
+    the layer loop (the per-layer gather then happens inside the body and
+    peak temp memory stays ~one layer, not L layers)."""
+    ctx = current_mesh()
+    if ctx is None:
+        return lp
+    mesh, axes = ctx
+    from repro.sharding.params import block_param_specs  # cycle-free at call
+
+    specs = block_param_specs(cfg, axes)
+
+    def strip(spec: P) -> P:
+        return P(*tuple(spec)[1:])  # drop the (scanned-away) L entry
+
+    return {
+        k: maybe_constrain(v, mesh, strip(specs[k])) if k in specs else v
+        for k, v in lp.items()
+    }

@@ -1,0 +1,176 @@
+"""Optimizers: AdamW (fp32 states) and blockwise-8-bit Adam.
+
+adam8bit stores both moments as int8 with per-block (256) fp32 absmax scales
+(dynamic re-quantisation each step, bitsandbytes-style).  For the 405B/480B
+train cells this is the difference between fitting and not fitting a
+16 GB/chip HBM budget:  fp32 Adam = 8 bytes/param of state; 8-bit = 2 bytes
+(+1/128 for scales).  Accuracy impact is validated against fp32 Adam in
+tests/test_train.py (loss-curve tracking within tolerance on a small model).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+BLOCK = 256
+
+
+@dataclasses.dataclass(frozen=True)
+class OptConfig:
+    kind: str = "adamw"        # "adamw" | "adam8bit"
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.0
+    grad_clip: float = 1.0
+
+
+class Q8(NamedTuple):
+    """Blockwise int8 tensor **in the parameter's own shape**.
+
+    q     int8[*param.shape]                       (same sharding as param)
+    scale f32[*param.shape[:-1], ceil(last/BLOCK)] (absmax per last-dim block)
+
+    Shape-preserving quantisation is load-bearing for SPMD: a flat
+    (n_blocks, 256) layout needs a reshape across incompatible shardings at
+    dequant time, which GSPMD materialises by *replicating* the fp32 moments
+    (measured: 1.6 TB/device for llama3-405b).  Param-shaped blocks keep
+    every optimizer op elementwise and perfectly sharded.
+    """
+    q: jax.Array
+    scale: jax.Array
+
+
+def _nb_last(shape) -> int:
+    last = shape[-1] if shape else 1
+    return -(-last // BLOCK)
+
+
+def q8_zeros_like(x: jax.Array) -> Q8:
+    shape = x.shape if x.ndim else (1,)
+    return Q8(
+        q=jnp.zeros(x.shape, jnp.int8),
+        scale=jnp.zeros((*shape[:-1], _nb_last(shape)), jnp.float32),
+    )
+
+
+def _expand_scale(scale: jax.Array, last: int) -> jax.Array:
+    s = jnp.repeat(scale, BLOCK, axis=-1)
+    return s[..., :last]
+
+
+def q8_quantize(x: jax.Array) -> Q8:
+    orig_ndim = x.ndim
+    if orig_ndim == 0:
+        x = x[None]
+    last = x.shape[-1]
+    nb = _nb_last(x.shape)
+    pad = nb * BLOCK - last
+    xf = x.astype(jnp.float32)
+    xp = jnp.pad(xf, [(0, 0)] * (x.ndim - 1) + [(0, pad)])
+    blocks = xp.reshape(*x.shape[:-1], nb, BLOCK)
+    scale = jnp.max(jnp.abs(blocks), axis=-1) / 127.0
+    q = jnp.round(xf / jnp.maximum(_expand_scale(scale, last), 1e-12))
+    q = jnp.clip(q, -127, 127).astype(jnp.int8)
+    if orig_ndim == 0:
+        q = q[0]
+    return Q8(q=q, scale=scale)
+
+
+def q8_dequantize(t: Q8, shape, dtype=jnp.float32) -> jax.Array:
+    q = t.q if t.q.ndim else t.q[None]
+    last = q.shape[-1]
+    out = q.astype(jnp.float32) * _expand_scale(t.scale, last)
+    return out.reshape(shape).astype(dtype)
+
+
+# --- log-domain variant for the second moment ------------------------------
+# Linear absmax int8 rounds small v entries to exactly 0, which explodes the
+# Adam update (m / (√0 + ε)).  v spans decades but is non-negative, so we
+# quantise log(v + tiny) instead: 8 bits over a ~30-nat range ⇒ ≤ 12 %
+# relative error on v, i.e. ≤ 6 % on √v — harmless for Adam.
+_V_TINY = 1e-12
+
+
+def q8v_zeros_like(x: jax.Array) -> Q8:
+    z = q8_zeros_like(x)
+    # encode v == 0 exactly at init: log(tiny) with scale chosen on first use
+    return z
+
+
+def q8v_quantize(v: jax.Array) -> Q8:
+    lv = jnp.log(v.astype(jnp.float32) + _V_TINY)
+    return q8_quantize(lv)
+
+
+def q8v_dequantize(t: Q8, shape) -> jax.Array:
+    # all-zero blocks (fresh state) decode to log==0 → exp(0)-tiny ≈ 1, which
+    # is wrong; detect the untouched state via scale==0 blocks → v = 0.
+    lv = q8_dequantize(t, shape)
+    untouched = _expand_scale(t.scale, t.q.shape[-1] if t.q.ndim else 1) == 0
+    v = jnp.exp(lv) - _V_TINY
+    v = jnp.where(untouched.reshape(shape), 0.0, v)
+    return jnp.maximum(v, 0.0)
+
+
+class OptState(NamedTuple):
+    step: jax.Array
+    m: object  # pytree of f32 arrays or Q8
+    v: object
+
+
+def init_opt_state(params, cfg: OptConfig) -> OptState:
+    if cfg.kind == "adam8bit":
+        z = jax.tree.map(q8_zeros_like, params)
+        z2 = jax.tree.map(q8_zeros_like, params)
+    else:
+        z = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+        z2 = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return OptState(step=jnp.zeros((), jnp.int32), m=z, v=z2)
+
+
+def _global_norm(tree) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+             for x in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def apply_updates(params, grads, state: OptState, cfg: OptConfig):
+    """→ (new_params, new_state, metrics). Updates computed in fp32 and cast
+    back to the parameter dtype."""
+    step = state.step + 1
+    gnorm = _global_norm(grads)
+    clip = jnp.minimum(1.0, cfg.grad_clip / jnp.maximum(gnorm, 1e-12)) \
+        if cfg.grad_clip else 1.0
+    bc1 = 1.0 - cfg.b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - cfg.b2 ** step.astype(jnp.float32)
+
+    is_q8 = cfg.kind == "adam8bit"
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * clip
+        mf = q8_dequantize(m, p.shape) if is_q8 else m
+        vf = q8v_dequantize(v, p.shape) if is_q8 else v
+        mf = cfg.b1 * mf + (1 - cfg.b1) * g
+        vf = cfg.b2 * vf + (1 - cfg.b2) * g * g
+        u = (mf / bc1) / (jnp.sqrt(vf / bc2) + cfg.eps)
+        if cfg.weight_decay:
+            u = u + cfg.weight_decay * p.astype(jnp.float32)
+        newp = (p.astype(jnp.float32) - cfg.lr * u).astype(p.dtype)
+        return newp, (q8_quantize(mf) if is_q8 else mf), \
+            (q8v_quantize(vf) if is_q8 else vf)
+
+    leaves_p, treedef = jax.tree.flatten(params)
+    leaves_g = treedef.flatten_up_to(grads)
+    leaves_m = treedef.flatten_up_to(state.m)
+    leaves_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(leaves_p, leaves_g, leaves_m, leaves_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, OptState(step=step, m=new_m, v=new_v), {"grad_norm": gnorm}

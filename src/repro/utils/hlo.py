@@ -1,0 +1,76 @@
+"""Parse compiled (post-SPMD) HLO text for collective traffic.
+
+`compiled.cost_analysis()` does not attribute collective bytes, so the
+roofline's collective term comes from summing the result-buffer sizes of
+every collective op in the optimized HLO, weighted by the op's wire-traffic
+factor for ring algorithms:
+
+    all-reduce          2·size·(n-1)/n  ≈ 2×   (reduce-scatter + all-gather)
+    all-gather          1·size·(n-1)/n  ≈ 1×   (result = gathered buffer)
+    reduce-scatter      1·input ≈ result·n ... counted via operand
+    all-to-all          1×
+    collective-permute  1×
+
+We report both the raw per-op byte totals and the weighted sum; the
+approximation (ring algorithms, (n-1)/n → 1) is recorded in EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2, "bf16": 2, "f16": 2,
+    "s32": 4, "u32": 4, "f32": 4, "s64": 8, "u64": 8, "f64": 8, "c64": 8,
+    "c128": 16,
+}
+
+# e.g.  %all-gather.3 = bf16[2,1024,512]{2,1,0} all-gather(...)
+#       ROOT %tuple ... all-reduce-start(
+_OP_RE = re.compile(
+    r"=\s*(?:\()?\s*([a-z0-9]+)\[([0-9,]*)\][^ ]*\s+"
+    r"(all-reduce|all-gather|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\("
+)
+
+_WEIGHT = {
+    "all-reduce": 2.0,
+    "all-gather": 1.0,
+    "reduce-scatter": 1.0,
+    "all-to-all": 1.0,
+    "collective-permute": 1.0,
+}
+
+
+def _size_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def collective_stats(hlo_text: str) -> dict:
+    """→ {op: {"count", "bytes"}, "weighted_bytes": float}."""
+    per_op: dict[str, dict] = defaultdict(lambda: {"count": 0, "bytes": 0})
+    seen_done = set()
+    for m in _OP_RE.finditer(hlo_text):
+        dtype, dims, op = m.group(1), m.group(2), m.group(3)
+        # async pairs (-start/-done) appear twice; count the start only
+        span = m.group(0)
+        if "-done(" in span:
+            continue
+        sz = _size_bytes(dtype, dims)
+        per_op[op]["count"] += 1
+        per_op[op]["bytes"] += sz
+    weighted = sum(
+        _WEIGHT[op] * st["bytes"] for op, st in per_op.items()
+    )
+    out = {op: dict(st) for op, st in per_op.items()}
+    out["weighted_bytes"] = float(weighted)
+    _ = seen_done
+    return out
+
+
+def count_op(hlo_text: str, opcode: str) -> int:
+    return len(re.findall(rf"\b{re.escape(opcode)}\(", hlo_text))

@@ -1,0 +1,35 @@
+"""Shared pytest fixtures.
+
+NOTE: XLA_FLAGS / device-count forcing is deliberately NOT set here — smoke
+tests and benches must see the real single CPU device.  Tests that need
+multiple devices spawn a subprocess via `run_multidevice` below.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+
+import numpy as np
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+
+
+def run_multidevice(script: str, n_devices: int = 8, timeout: int = 600) -> str:
+    """Run a python snippet in a subprocess with N fake host devices."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={n_devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    r = subprocess.run(
+        [sys.executable, "-c", script],
+        capture_output=True, text=True, timeout=timeout, env=env,
+    )
+    assert r.returncode == 0, f"stdout:\n{r.stdout}\nstderr:\n{r.stderr}"
+    return r.stdout
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.RandomState(0)

@@ -1,0 +1,99 @@
+"""Encoders and bit packing (paper §5.2) — property-based."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from repro.core import encoding as E
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    strategy=st.sampled_from(E.STRATEGIES),
+    bits=st.integers(1, 4),
+    rows=st.integers(2, 200),
+    feats=st.integers(1, 8),
+    seed=st.integers(0, 1000),
+)
+def test_encode_shape_and_binary(strategy, bits, rows, feats, seed):
+    rng = np.random.RandomState(seed)
+    x = rng.randn(rows, feats).astype(np.float32)
+    enc = E.fit_encoder(x, E.EncodingConfig(strategy, bits))
+    out = E.encode(enc, x)
+    assert out.shape == (rows, feats * bits)
+    assert set(np.unique(out)) <= {0, 1}
+
+
+@settings(max_examples=25, deadline=None)
+@given(rows=st.integers(1, 300), nbits=st.integers(1, 20),
+       seed=st.integers(0, 1000))
+def test_pack_unpack_roundtrip(rows, nbits, seed):
+    rng = np.random.RandomState(seed)
+    bits = rng.randint(0, 2, (rows, nbits)).astype(np.uint8)
+    w = E.n_words(rows)
+    words = E.pack_bits_rows(bits, w)
+    back = np.asarray(E.unpack_words(jnp.asarray(words), rows))
+    assert np.array_equal(back.T, bits)
+
+
+def test_gray_code_adjacency():
+    """Adjacent buckets differ in exactly one bit (gray property)."""
+    cfg = E.EncodingConfig("gray", 4)
+    table = E._code_table(cfg)
+    for i in range(len(table) - 1):
+        assert (table[i] != table[i + 1]).sum() == 1
+
+
+def test_onehot_code():
+    cfg = E.EncodingConfig("onehot", 4)
+    table = E._code_table(cfg)
+    assert table.shape == (4, 4)
+    assert (table.sum(axis=1) == 1).all()
+
+
+def test_quantile_buckets_roughly_equal():
+    rng = np.random.RandomState(0)
+    x = rng.randn(10_000, 1).astype(np.float32)
+    enc = E.fit_encoder(x, E.EncodingConfig("quantile", 2))
+    buckets = np.searchsorted(enc.thresholds[0], x[:, 0], side="right")
+    counts = np.bincount(buckets, minlength=4)
+    assert counts.min() > 0.8 * 2500 and counts.max() < 1.2 * 2500
+
+
+def test_quantize_equal_width():
+    x = np.linspace(0, 1, 1000)[:, None].astype(np.float32)
+    enc = E.fit_encoder(x, E.EncodingConfig("quantize", 2))
+    widths = np.diff(np.concatenate([[0.0], enc.thresholds[0], [1.0]]))
+    assert np.allclose(widths, 0.25, atol=1e-3)
+
+
+def test_class_codes():
+    codes = E.class_code_bits(10)
+    assert codes.shape == (10, 4)
+    ids = (codes * (1 << np.arange(4))).sum(axis=1)
+    assert np.array_equal(ids, np.arange(10))
+
+
+def test_encoder_constant_feature():
+    """Constant features must not crash fitting (zero span)."""
+    x = np.ones((50, 3), np.float32)
+    for strat in E.STRATEGIES:
+        enc = E.fit_encoder(x, E.EncodingConfig(strat, 2))
+        out = E.encode(enc, x)
+        assert out.shape == (50, 6)
+
+
+def test_pack_dataset_masks():
+    rng = np.random.RandomState(1)
+    bits = rng.randint(0, 2, (70, 4)).astype(np.uint8)
+    y = rng.randint(0, 3, 70)
+    d = E.pack_dataset(bits, y, 3)
+    import jax
+
+    # mask covers exactly 70 rows
+    pop = int(jax.lax.population_count(d.mask_words).sum())
+    assert pop == 70
+    # class masks partition the valid rows
+    cls = int(jax.lax.population_count(d.class_words).sum())
+    assert cls == 70

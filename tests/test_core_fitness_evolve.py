@@ -1,0 +1,113 @@
+"""Fitness correctness (packed vs row reference) and 1+λ loop behaviour."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import encoding as E
+from repro.core import fitness as F
+from repro.core import gates
+from repro.core.evolve import (
+    EvolveConfig, evolve_packed, evolve_with_history, make_eval_fn,
+)
+from repro.core.genome import CircuitSpec, init_genome, opcodes
+from repro.kernels import ref
+
+
+@settings(max_examples=20, deadline=None)
+@given(rows=st.integers(5, 400), classes=st.integers(2, 6),
+       seed=st.integers(0, 10_000))
+def test_balanced_accuracy_packed_equals_reference(rows, classes, seed):
+    """Packed popcount fitness == unpacked per-row reference — the key
+    invariant that makes sharded (psum) fitness exact."""
+    rng = np.random.RandomState(seed)
+    n_out = max(1, int(np.ceil(np.log2(classes))))
+    y = rng.randint(0, classes, rows)
+    pred = rng.randint(0, 2 ** n_out, rows)  # may predict invalid codes
+    pred_bits = ((pred[:, None] >> np.arange(n_out)) & 1).astype(np.uint8)
+    w = E.n_words(rows)
+    out_words = jnp.asarray(E.pack_bits_rows(pred_bits, w))
+    data = E.pack_dataset(np.zeros((rows, 1), np.uint8), y, classes, n_out)
+    mask = data.mask_words
+    ba = float(F.balanced_accuracy(out_words, data, mask))
+    ba_ref = F.balanced_accuracy_rows(pred, y, np.ones(rows, bool), classes)
+    assert ba == pytest.approx(ba_ref, abs=1e-6)
+
+
+def test_fitness_split_additivity():
+    """confusion(train) + confusion(val) == confusion(all)."""
+    rng = np.random.RandomState(0)
+    rows = 257
+    bits = rng.randint(0, 2, (rows, 6)).astype(np.uint8)
+    y = rng.randint(0, 3, rows)
+    data = E.pack_dataset(bits, y, 3)
+    w = data.x_words.shape[1]
+    mtr, mva = E.split_masks(rows, w, 0.5, seed=3)
+    spec = CircuitSpec(6, 30, 2, gates.FULL_FS)
+    g = init_genome(jax.random.key(0), spec)
+    out = ref.eval_circuit_packed(opcodes(g, spec), g.edge_src, g.out_src,
+                                  data.x_words)
+    c1, n1 = F.confusion_counts(out, data, mtr)
+    c2, n2 = F.confusion_counts(out, data, mva)
+    ca, na = F.confusion_counts(out, data, data.mask_words)
+    assert np.array_equal(np.asarray(c1 + c2), np.asarray(ca))
+    assert np.array_equal(np.asarray(n1 + n2), np.asarray(na))
+    assert int(na.sum()) == rows
+
+
+def _learnable_problem(rows=1500, seed=0):
+    rng = np.random.RandomState(seed)
+    x = rng.randn(rows, 5).astype(np.float32)
+    y = ((x[:, 0] > 0) | (x[:, 2] > 1.0)).astype(np.int64)
+    enc = E.fit_encoder(x, E.EncodingConfig("quantile", 2))
+    bits = E.encode(enc, x)
+    data = E.pack_dataset(bits, y, 2)
+    mtr, mva = E.split_masks(rows, data.x_words.shape[1], 0.5, seed=1)
+    return data, mtr, mva, bits.shape[1]
+
+
+def test_evolution_learns():
+    """End-to-end: fitness improves well above chance on a learnable rule."""
+    data, mtr, mva, n_in = _learnable_problem()
+    spec = CircuitSpec(n_in, 60, 1, gates.FULL_FS)
+    cfg = EvolveConfig(lam=4, kappa=400, max_gens=2500)
+    final = jax.jit(
+        lambda k: evolve_packed(k, spec, cfg, data, mtr, mva)
+    )(jax.random.key(0))
+    assert float(final.best_val) > 0.80, float(final.best_val)
+    assert int(final.gen) <= 2500
+
+
+def test_termination_kappa():
+    """γ/κ: with an impossible γ the loop stops after exactly κ gens."""
+    data, mtr, mva, n_in = _learnable_problem(rows=300)
+    spec = CircuitSpec(n_in, 20, 1, gates.FULL_FS)
+    cfg = EvolveConfig(lam=2, gamma=2.0, kappa=25, max_gens=500)
+    final = evolve_packed(jax.random.key(1), spec, cfg, data, mtr, mva)
+    assert int(final.gen) == 25
+
+
+def test_parent_fitness_monotone():
+    """1+λ with >= selection: parent training fitness never decreases."""
+    data, mtr, mva, n_in = _learnable_problem(rows=400)
+    spec = CircuitSpec(n_in, 30, 1, gates.FULL_FS)
+    cfg = EvolveConfig(lam=4, kappa=10**9, max_gens=150)
+    eval_fn = make_eval_fn(spec, data, mtr, mva)
+    _, hist = jax.jit(
+        lambda k: evolve_with_history(k, spec, cfg, eval_fn)
+    )(jax.random.key(2))
+    pf = np.asarray(hist[0])
+    assert (np.diff(pf) >= -1e-7).all()
+
+
+def test_kernel_path_equals_ref_path_in_evolution():
+    """EvolveConfig(use_kernel=True) reaches identical results (same seed)."""
+    data, mtr, mva, n_in = _learnable_problem(rows=400)
+    spec = CircuitSpec(n_in, 25, 1, gates.FULL_FS)
+    cfg_r = EvolveConfig(lam=2, kappa=50, max_gens=120, use_kernel=False)
+    cfg_k = EvolveConfig(lam=2, kappa=50, max_gens=120, use_kernel=True)
+    f_r = evolve_packed(jax.random.key(5), spec, cfg_r, data, mtr, mva)
+    f_k = evolve_packed(jax.random.key(5), spec, cfg_k, data, mtr, mva)
+    assert float(f_r.best_val) == pytest.approx(float(f_k.best_val))
+    assert int(f_r.gen) == int(f_k.gen)

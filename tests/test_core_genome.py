@@ -1,0 +1,112 @@
+"""Genome structure, mutation invariants (property-based), neutral substrate."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import gates
+from repro.core.genome import (
+    CircuitSpec, active_nodes, init_genome, opcodes, validate_genome,
+)
+from repro.core.mutate import mutate, mutate_children
+
+SPEC_ST = st.builds(
+    CircuitSpec,
+    n_inputs=st.integers(1, 40),
+    n_nodes=st.integers(1, 80),
+    n_outputs=st.integers(1, 4),
+    fn_set=st.sampled_from([gates.FULL_FS, gates.NAND_FS, gates.EXTENDED_FS]),
+)
+
+
+@settings(max_examples=30, deadline=None)
+@given(spec=SPEC_ST, seed=st.integers(0, 2**31 - 1))
+def test_init_genome_valid(spec, seed):
+    g = init_genome(jax.random.key(seed), spec)
+    assert validate_genome(g, spec)
+
+
+@settings(max_examples=30, deadline=None)
+@given(spec=SPEC_ST, seed=st.integers(0, 2**31 - 1),
+       p=st.floats(0.0, 1.0))
+def test_mutation_preserves_validity(spec, seed, p):
+    """Mutated genomes stay structurally valid (acyclicity by construction)
+    at any mutation rate — the paper's edge-mutation validity conditions."""
+    k1, k2 = jax.random.split(jax.random.key(seed))
+    g = init_genome(k1, spec)
+    g2 = mutate(k2, g, spec, p)
+    assert validate_genome(g2, spec)
+
+
+@settings(max_examples=20, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1))
+def test_nand_only_function_mutation_is_noop(seed):
+    """|F| == 1 ⇒ node mutations impossible (paper §3.2 f' ≠ f)."""
+    spec = CircuitSpec(8, 30, 1, gates.NAND_FS)
+    k1, k2 = jax.random.split(jax.random.key(seed))
+    g = init_genome(k1, spec)
+    g2 = mutate(k2, g, spec, 1.0)
+    assert np.array_equal(np.asarray(g.gate_fn), np.asarray(g2.gate_fn))
+    assert (np.asarray(opcodes(g2, spec)) == gates.NAND).all()
+
+
+def test_mutation_rate_controls_change_volume():
+    """Bernoulli(p) masks: expected mutated-edge count ≈ p·E (binomial)."""
+    spec = CircuitSpec(16, 100, 2, gates.FULL_FS)
+    g = init_genome(jax.random.key(0), spec)
+    p = 0.3
+    diffs = []
+    for s in range(200):
+        g2 = mutate(jax.random.key(s + 1), g, spec, p)
+        diffs.append(
+            int((np.asarray(g.edge_src) != np.asarray(g2.edge_src)).sum())
+        )
+    mean = np.mean(diffs)
+    # E[changed] slightly below p·2n (some draws abandoned / node0 edge)
+    assert 0.7 * p * 200 < mean <= p * 200 + 3, mean
+
+
+def test_single_input_edge_mutation_abandoned():
+    """Paper's special case: I == 1 and only one valid source → abandoned."""
+    spec = CircuitSpec(1, 5, 1, gates.FULL_FS)
+    g = init_genome(jax.random.key(0), spec)
+    g2 = mutate(jax.random.key(1), g, spec, 1.0)
+    # node 0's edges can only point to input 0 — must be unchanged
+    assert np.asarray(g2.edge_src)[0].tolist() == [0, 0]
+    assert validate_genome(g2, spec)
+
+
+def test_inactive_nodes_exist_and_mutate_freely():
+    """Neutral drift substrate: inactive material exists and its mutation
+    leaves the active function unchanged (paper §3.1)."""
+    from repro.core import encoding as E
+    from repro.kernels import ref
+
+    spec = CircuitSpec(8, 60, 1, gates.FULL_FS)
+    g = init_genome(jax.random.key(0), spec)
+    act = active_nodes(g, spec)
+    assert act.sum() < spec.n_nodes  # some inactive material
+    # mutate only an inactive node's function; outputs must be identical
+    inactive = int(np.where(~act)[0][0])
+    g2 = g._replace(
+        gate_fn=g.gate_fn.at[inactive].set((g.gate_fn[inactive] + 1)
+                                           % len(spec.fn_set))
+    )
+    rng = np.random.RandomState(0)
+    bits = rng.randint(0, 2, (64, 8)).astype(np.uint8)
+    w = E.n_words(64)
+    xw = jnp.asarray(E.pack_bits_rows(bits, w))
+    o1 = ref.eval_circuit_packed(opcodes(g, spec), g.edge_src, g.out_src, xw)
+    o2 = ref.eval_circuit_packed(opcodes(g2, spec), g2.edge_src, g2.out_src, xw)
+    assert np.array_equal(np.asarray(o1), np.asarray(o2))
+
+
+def test_children_are_distinct_mutations():
+    spec = CircuitSpec(8, 50, 1, gates.FULL_FS)
+    g = init_genome(jax.random.key(0), spec)
+    kids = mutate_children(jax.random.key(1), g, spec, 0.05, 4)
+    assert kids.gate_fn.shape == (4, 50)
+    flat = [np.asarray(jax.tree.map(lambda x: x[i], kids).edge_src).tobytes()
+            for i in range(4)]
+    assert len(set(flat)) > 1  # overwhelmingly likely distinct

@@ -1,0 +1,98 @@
+"""Netlist → Verilog/C → hardware model toolflow (paper §4, §5.5)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import encoding as E
+from repro.core import gates, hardware
+from repro.core.genome import CircuitSpec, init_genome, opcodes
+from repro.core.netlist import Netlist, eval_netlist, extract
+from repro.core.verilog import simulate_verilog, to_c, to_verilog
+from repro.kernels import ref
+
+
+@pytest.fixture(params=[0, 1, 2, 3])
+def random_netlist(request):
+    spec = CircuitSpec(10, 50, 2, gates.FULL_FS)
+    g = init_genome(jax.random.key(request.param), spec)
+    return spec, g, extract(g, spec)
+
+
+def test_netlist_matches_jax_eval(random_netlist):
+    spec, g, net = random_netlist
+    rng = np.random.RandomState(0)
+    bits = rng.randint(0, 2, (128, 10)).astype(np.uint8)
+    w = E.n_words(128)
+    out_jax = ref.eval_circuit_packed(
+        opcodes(g, spec), g.edge_src, g.out_src,
+        E.pack_bits_rows(bits, w),
+    )
+    out_net = eval_netlist(net, bits)
+    unpacked = np.asarray(E.unpack_words(out_jax, 128)).T
+    np.testing.assert_array_equal(unpacked, out_net)
+
+
+def test_emitted_verilog_matches_netlist(random_netlist):
+    """Closes the loop on the *emitted RTL text* itself."""
+    _, _, net = random_netlist
+    rng = np.random.RandomState(1)
+    bits = rng.randint(0, 2, (64, 10)).astype(np.uint8)
+    v = to_verilog(net)
+    assert v.startswith("module") and v.rstrip().endswith("endmodule")
+    np.testing.assert_array_equal(
+        simulate_verilog(v, bits), eval_netlist(net, bits)
+    )
+
+
+def test_verilog_registered_has_buffers(random_netlist):
+    _, _, net = random_netlist
+    v = to_verilog(net, registered=True)
+    assert "posedge clk" in v
+    assert "input buffer holds only consumed bits" in v
+
+
+def test_c_emission(random_netlist):
+    _, _, net = random_netlist
+    c = to_c(net)
+    assert "#pragma HLS PIPELINE" in c
+    assert f"const uint8_t x[{net.n_inputs}]" in c
+
+
+def test_active_extraction_bounds(random_netlist):
+    spec, g, net = random_netlist
+    assert net.n_gates <= spec.n_nodes
+    assert net.depth() <= net.n_gates + 1
+    assert all(i < spec.n_inputs for i in net.used_inputs)
+
+
+def test_hardware_model_reproduces_paper_table2():
+    """Calibration check against the paper's own FlexIC numbers."""
+    xgb_blood = hardware.gbdt_hw(1, 6, 4, tech=hardware.FLEXIC_08UM)
+    assert xgb_blood.area_mm2 == pytest.approx(5.4, rel=0.15)      # paper 5.4
+    assert xgb_blood.power_mw == pytest.approx(4.12, rel=0.25)     # paper 4.12
+    assert xgb_blood.ge_total == pytest.approx(1520, rel=0.15)     # paper 1520
+    xgb_led = hardware.gbdt_hw(10, 5, 7, tech=hardware.FLEXIC_08UM)
+    assert xgb_led.area_mm2 == pytest.approx(27.74, rel=0.2)       # paper 27.74
+    assert xgb_led.ge_total == pytest.approx(7780, rel=0.15)       # paper 7780
+
+
+def test_hardware_ratios_match_paper_bands(random_netlist):
+    """Fig 14/15 bands: MLP ≫ XGBoost ≫ Tiny in area and power."""
+    _, _, net = random_netlist
+    tiny = hardware.tiny_classifier_report(net, hardware.SILICON_45NM)
+    xgb = hardware.gbdt_hw(1, 6, 4, tech=hardware.SILICON_45NM)
+    mlp = hardware.mlp_hw([4, 64, 64, 64, 2], tech=hardware.SILICON_45NM)
+    assert mlp.area_mm2 > xgb.area_mm2 > tiny.area_mm2
+    assert mlp.power_mw > xgb.power_mw > tiny.power_mw
+    # Fig 14: MLP ≈ 34–38 mW at 45nm/1GHz
+    assert 25 < mlp.power_mw < 50
+    # paper: tiny classifiers 0.04–0.97 mW band
+    assert tiny.power_mw < 2.0
+
+
+def test_fpga_resource_model(random_netlist):
+    _, _, net = random_netlist
+    tiny = hardware.tiny_classifier_report(net, hardware.SILICON_45NM)
+    mlp = hardware.mlp_hw([4, 64, 64, 64, 2])
+    assert tiny.luts < mlp.luts
+    assert tiny.ffs == net.buffer_bits()
