@@ -1,0 +1,17 @@
+PYTHON ?= python
+export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
+
+.PHONY: test dev-deps bench-serve example-serve
+
+dev-deps:
+	$(PYTHON) -m pip install -r requirements-dev.txt
+
+# Tier-1 verification (ROADMAP.md)
+test:
+	$(PYTHON) -m pytest -x -q
+
+bench-serve:
+	$(PYTHON) benchmarks/serve_circuits.py
+
+example-serve:
+	$(PYTHON) examples/serve_circuits.py

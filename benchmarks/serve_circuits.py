@@ -1,0 +1,134 @@
+"""Multi-tenant circuit serving throughput / latency.
+
+Builds a fleet of heterogeneous tenants (random genomes — serving cost does
+not depend on how a circuit was found), drives Poisson-ish request traffic
+through the `CircuitServer` micro-batcher, and reports QPS, p50/p99 tick
+latency, and fused-launch occupancy.  The headline property the acceptance
+criteria ask for is printed per config: every tick that had ≥ 2 pending
+tenants served them with exactly one kernel launch, and results stay
+bit-identical to the per-model `ServableCircuit.predict` path.
+
+    PYTHONPATH=src python benchmarks/serve_circuits.py [--ticks N]
+        [--tenants N] [--kernel]
+
+On CPU the Pallas path runs in interpret mode (plumbing validation, not
+speed); pass --kernel to exercise it anyway.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import save_json
+from repro.core import encoding as E
+from repro.core import gates
+from repro.core.api import ServableCircuit
+from repro.core.genome import CircuitSpec, init_genome
+from repro.serve.circuits import CircuitRegistry, CircuitServer
+
+# (features, bits/input, gates, classes) per tenant, cycled
+SHAPES = [(4, 2, 60, 2), (7, 4, 120, 3), (3, 2, 40, 4), (10, 4, 200, 5),
+          (6, 2, 80, 2), (12, 4, 300, 8)]
+
+
+def make_fleet(n_tenants: int, rng) -> CircuitRegistry:
+    reg = CircuitRegistry()
+    for i in range(n_tenants):
+        f, b, n, c = SHAPES[i % len(SHAPES)]
+        enc = E.fit_encoder(rng.randn(256, f).astype(np.float32),
+                            E.EncodingConfig("quantile", b))
+        n_out = max(1, int(np.ceil(np.log2(max(c, 2)))))
+        spec = CircuitSpec(enc.n_bits_total, n, n_out, gates.FULL_FS)
+        reg.add(
+            f"tenant{i}",
+            ServableCircuit(spec, init_genome(jax.random.key(i), spec),
+                            enc, c),
+        )
+    return reg
+
+
+def drive(server: CircuitServer, registry: CircuitRegistry, *, ticks: int,
+          mean_rows: int, rng, verify_every: int = 0) -> int:
+    """Submit traffic and tick; returns number of parity mismatches."""
+    mismatches = 0
+    tenants = list(registry)
+    for t in range(ticks):
+        tickets = []
+        for name in tenants:
+            if rng.rand() < 0.2:  # tenant idle this tick
+                continue
+            n_feats = registry.get(name).encoder.n_features
+            rows = 1 + rng.poisson(mean_rows)
+            x = rng.randn(rows, n_feats).astype(np.float32)
+            tickets.append((name, server.submit(name, x), x))
+        report = server.tick()
+        assert report.launches <= 1
+        for name, ticket, x in tickets:
+            got = server.result(ticket)
+            if verify_every and t % verify_every == 0:
+                want = registry.get(name).predict(x)
+                mismatches += int(not np.array_equal(got, want))
+            else:
+                assert got.shape == (x.shape[0],)
+    return mismatches
+
+
+def run(ticks: int = 50, n_tenants: int = 8, mean_rows: int = 24,
+        use_kernel: bool = False, seed: int = 0) -> dict:
+    rng = np.random.RandomState(seed)
+    registry = make_fleet(n_tenants, rng)
+    server = CircuitServer(registry, use_kernel=use_kernel)
+
+    # warmup: trigger plan build + jit compile outside the timed window
+    drive(server, registry, ticks=2, mean_rows=mean_rows, rng=rng)
+    server.stats = type(server.stats)()
+
+    t0 = time.perf_counter()
+    mism = drive(server, registry, ticks=ticks, mean_rows=mean_rows,
+                 rng=rng, verify_every=10)
+    wall = time.perf_counter() - t0
+
+    rep = server.stats.report()
+    rep.update({
+        "impl": "pallas-kernel" if use_kernel else "jnp-oracle",
+        "n_tenants": n_tenants,
+        "wall_s": round(wall, 3),
+        "parity_mismatches": mism,
+    })
+    return rep
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ticks", type=int, default=50)
+    ap.add_argument("--tenants", type=int, default=8)
+    ap.add_argument("--mean-rows", type=int, default=24)
+    ap.add_argument("--kernel", action="store_true",
+                    help="also run the Pallas spans kernel (interpret on CPU)")
+    args = ap.parse_args()
+
+    results = []
+    configs = [dict(use_kernel=False)]
+    if args.kernel:
+        configs.append(dict(use_kernel=True))
+    for cfg in configs:
+        rep = run(ticks=args.ticks, n_tenants=args.tenants,
+                  mean_rows=args.mean_rows, **cfg)
+        results.append(rep)
+        print(f"--- {rep['impl']} ({rep['n_tenants']} tenants) ---")
+        for k in ("qps", "rows_per_s", "p50_tick_ms", "p99_tick_ms",
+                  "mean_occupancy", "max_tenants_per_launch", "launches",
+                  "ticks", "parity_mismatches"):
+            print(f"  {k:23s} {rep[k]}")
+        assert rep["parity_mismatches"] == 0
+        assert rep["max_tenants_per_launch"] >= 4, (
+            "fused launch must serve >= 4 heterogeneous tenants"
+        )
+    save_json("serve_circuits", results)
+
+
+if __name__ == "__main__":
+    main()

@@ -43,6 +43,63 @@ DEFAULT_ENCODINGS = (
 )
 
 
+def decode_predictions(
+    out_words, n_rows: int, n_classes: int
+) -> np.ndarray:
+    """Packed circuit output words → int class ids, length exactly n_rows.
+
+    `pack_bits_rows` pads the row axis up to the 32-bit word boundary; the
+    circuit computes garbage bits for those pad rows, so the decode must trim
+    to the true row count before the class clamp (out-of-range binary codes
+    map to the last class, matching training-time fitness masking).
+    """
+    ids = np.asarray(F.predicted_class_ids(out_words, n_rows))[:n_rows]
+    return np.minimum(ids, n_classes - 1)
+
+
+@dataclasses.dataclass(frozen=True)
+class ServableCircuit:
+    """Deployable inference artifact of a fitted classifier: the evolved
+    genome plus everything needed to run it on raw float features (fitted
+    encoder, class count).  This is what `repro.serve.circuits` registers —
+    fitting state (records, search config) deliberately stays behind.
+    """
+
+    spec: CircuitSpec
+    genome: Genome
+    encoder: E.Encoder
+    n_classes: int
+
+    def __post_init__(self):
+        assert self.spec.n_inputs == self.encoder.n_bits_total, (
+            self.spec.n_inputs, self.encoder.n_bits_total,
+        )
+        assert self.n_classes >= 2
+
+    @property
+    def n_inputs(self) -> int:
+        return self.spec.n_inputs
+
+    @property
+    def n_outputs(self) -> int:
+        return self.spec.n_outputs
+
+    def predict(self, x: np.ndarray, *, use_kernel: bool = False) -> np.ndarray:
+        """Single-model reference path (the serving engine must match this
+        bit-exactly)."""
+        bits = E.encode(self.encoder, np.asarray(x, np.float32))
+        r = bits.shape[0]
+        x_words = E.pack_bits_rows(bits, E.n_words(r))
+        out = kernel_ops.eval_circuit(
+            opcodes(self.genome, self.spec),
+            self.genome.edge_src,
+            self.genome.out_src,
+            x_words,
+            use_kernel=use_kernel,
+        )
+        return decode_predictions(out, r, self.n_classes)
+
+
 class AutoTinyClassifier:
     def __init__(
         self,
@@ -117,20 +174,16 @@ class AutoTinyClassifier:
         if self.genome_ is None:
             raise RuntimeError("call fit() first")
 
-    def predict(self, x: np.ndarray) -> np.ndarray:
+    def to_servable(self) -> ServableCircuit:
+        """Export the deployment artifact (registered by serve.circuits)."""
         self._require_fit()
-        bits = E.encode(self.encoder_, np.asarray(x, np.float32))
-        r = bits.shape[0]
-        w = E.n_words(r)
-        x_words = E.pack_bits_rows(bits, w)
-        out = kernel_ops.eval_circuit(
-            opcodes(self.genome_, self.spec_),
-            self.genome_.edge_src,
-            self.genome_.out_src,
-            x_words,
+        return ServableCircuit(
+            spec=self.spec_, genome=self.genome_,
+            encoder=self.encoder_, n_classes=self.n_classes_,
         )
-        ids = np.asarray(F.predicted_class_ids(out, r))
-        return np.minimum(ids, self.n_classes_ - 1)
+
+    def predict(self, x: np.ndarray) -> np.ndarray:
+        return self.to_servable().predict(x)
 
     def balanced_score(self, x: np.ndarray, y: np.ndarray) -> float:
         pred = self.predict(x)

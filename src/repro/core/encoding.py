@@ -103,6 +103,27 @@ def encode(enc: Encoder, x: np.ndarray) -> np.ndarray:
     return bits.reshape(r, f * enc.bits).astype(np.uint8)
 
 
+def encode_batched(
+    enc: Encoder, arrays: "list[np.ndarray]"
+) -> tuple[np.ndarray, np.ndarray]:
+    """Encode several row blocks through one vectorized `encode` call.
+
+    The serving micro-batcher concatenates a tenant's pending request rows,
+    encodes them in a single searchsorted sweep per feature, and splits the
+    results back by offset.  Returns (bits uint8[R_total, F*bits],
+    offsets int64[len(arrays)+1]) with block k at rows
+    [offsets[k], offsets[k+1]).
+    """
+    arrays = [np.asarray(a, np.float32) for a in arrays]
+    offsets = np.zeros(len(arrays) + 1, np.int64)
+    if arrays:
+        offsets[1:] = np.cumsum([a.shape[0] for a in arrays])
+    if not arrays or offsets[-1] == 0:
+        return np.zeros((0, enc.n_bits_total), np.uint8), offsets
+    bits = encode(enc, np.concatenate(arrays, axis=0))
+    return bits, offsets
+
+
 def class_code_bits(n_classes: int, n_out_bits: int | None = None) -> np.ndarray:
     """Binary class codes uint8[C, O] (paper §3.6: outputs encode the class)."""
     o = n_out_bits or max(1, int(np.ceil(np.log2(max(n_classes, 2)))))

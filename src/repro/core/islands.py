@@ -28,6 +28,8 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import Mesh, PartitionSpec as P
 
+from repro.utils.jax_compat import shard_map
+
 from repro.core import fitness as F
 from repro.core.encoding import PackedDataset
 from repro.core.evolve import (
@@ -105,7 +107,7 @@ def evolve_islands(
     v_axes = P(icfg.data_axes)         # (W,) arrays
 
     @partial(
-        jax.shard_map,
+        shard_map,
         mesh=mesh,
         in_specs=(
             P(icfg.island_axis),        # keys

@@ -83,6 +83,99 @@ def _kernel(
         o_ref[0, j, :] = vals_ref[out_src_ref[p, j], :]
 
 
+def _spans_kernel(
+    # scalar-prefetch (SMEM):
+    opcodes_ref,   # i32[P, n]
+    edge_src_ref,  # i32[P, n, 2]
+    out_src_ref,   # i32[P, O]
+    block_off_ref,  # i32[P]  word-block offset of circuit p's span
+    in_width_ref,   # i32[P]  live input rows of circuit p (rest masked to 0)
+    # VMEM blocks:
+    x_ref,         # u32[I_max, BW]  (block taken at block_off[p] + wb)
+    o_ref,         # u32[1, O, BW]
+    # scratch:
+    vals_ref,      # u32[I_max+n, BW]
+):
+    """Span variant of `_kernel` for multi-tenant serving.
+
+    Each circuit p owns a contiguous run of word blocks (its tenant's
+    micro-batch) starting at ``block_off[p]`` — the x BlockSpec index_map
+    reads the prefetched offsets, so one launch walks P disjoint spans
+    instead of P × W full sweeps.  Input rows at or above ``in_width[p]``
+    are zero-masked when seeding the node-value table: a tenant narrower
+    than I_max can never observe another tenant's bits, even through a
+    corrupted genome whose edges index past its own inputs.
+    """
+    p = pl.program_id(0)
+    n_in = x_ref.shape[0]
+    n_nodes = opcodes_ref.shape[1]
+    n_out = out_src_ref.shape[1]
+
+    row = jax.lax.broadcasted_iota(jnp.int32, x_ref.shape, 0)
+    vals_ref[:n_in, :] = jnp.where(
+        row < in_width_ref[p], x_ref[...], jnp.uint32(0)
+    )
+
+    def body(i, _):
+        a_idx = edge_src_ref[p, i, 0]
+        b_idx = edge_src_ref[p, i, 1]
+        op = opcodes_ref[p, i]
+        a = vals_ref[a_idx, :]
+        b = vals_ref[b_idx, :]
+        vals_ref[n_in + i, :] = _gate_select(op, a, b)
+        return 0
+
+    jax.lax.fori_loop(0, n_nodes, body, 0)
+
+    for j in range(n_out):
+        o_ref[0, j, :] = vals_ref[out_src_ref[p, j], :]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("span_words", "block_words", "interpret")
+)
+def eval_population_spans_kernel(
+    opcodes: jax.Array,    # i32[P, n]
+    edge_src: jax.Array,   # i32[P, n, 2]
+    out_src: jax.Array,    # i32[P, O]
+    x_words: jax.Array,    # u32[I_max, W_total]
+    word_off: jax.Array,   # i32[P]  word offset of circuit p's span
+    in_width: jax.Array,   # i32[P]  live input rows per circuit
+    *,
+    span_words: int,       # words each circuit evaluates (multiple of block)
+    block_words: int = 512,
+    interpret: bool = False,
+) -> jax.Array:            # u32[P, O, span_words]
+    pop, n = opcodes.shape
+    n_in, w = x_words.shape
+    n_out = out_src.shape[1]
+    assert span_words % block_words == 0, (span_words, block_words)
+    assert w % block_words == 0, (w, block_words)
+    grid = (pop, span_words // block_words)
+    block_off = word_off.astype(jnp.int32) // block_words
+
+    return pl.pallas_call(
+        _spans_kernel,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=5,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec(
+                    (n_in, block_words),
+                    lambda p, wb, opc, es, osrc, boff, iw: (0, boff[p] + wb),
+                ),
+            ],
+            out_specs=pl.BlockSpec(
+                (1, n_out, block_words), lambda p, wb, *_: (p, 0, wb)
+            ),
+            scratch_shapes=[pltpu.VMEM((n_in + n, block_words), jnp.uint32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((pop, n_out, span_words), jnp.uint32),
+        interpret=interpret,
+    )(opcodes, edge_src, out_src, block_off, in_width.astype(jnp.int32),
+      x_words)
+
+
 @functools.partial(
     jax.jit, static_argnames=("block_words", "interpret")
 )

@@ -12,6 +12,7 @@ import functools
 
 import jax
 import jax.numpy as jnp
+import numpy as np
 
 from repro.kernels import circuit_eval, ref
 
@@ -60,6 +61,72 @@ def eval_population(
         interpret=(not _on_tpu()) if interpret is None else interpret,
     )
     return out[..., :w]
+
+
+@functools.partial(jax.jit, static_argnames=("span_words",))
+def _spans_ref(opcodes, edge_src, out_src, x_words, word_off, in_width,
+               span_words):
+    return ref.eval_population_spans_packed(
+        opcodes, edge_src, out_src, x_words, word_off, in_width,
+        span_words=span_words,
+    )
+
+
+def eval_population_spans(
+    opcodes: jax.Array,    # i32[P, n]
+    edge_src: jax.Array,   # i32[P, n, 2]
+    out_src: jax.Array,    # i32[P, O]
+    x_words: jax.Array,    # u32[I_max, W_total] fused multi-tenant buffer
+    word_off: jax.Array,   # i32[P] word offset of circuit p's span
+    in_width: jax.Array,   # i32[P] live input rows of circuit p
+    *,
+    span_words: int,
+    use_kernel: bool = False,
+    interpret: bool | None = None,
+) -> jax.Array:            # u32[P, O, span_words]
+    """Multi-tenant population eval: circuit p reads only its own span of
+    ``span_words`` words, with per-circuit input-width masking.
+
+    This is the serving hot path (`repro.serve.circuits`): all tenants'
+    micro-batches are packed side by side on the word axis and one launch
+    evaluates every tenant on its own rows — P spans instead of a P × W_total
+    full sweep.  ``word_off`` entries must be multiples of ``span_words``
+    (the serving engine lays spans out back to back); the kernel path
+    rejects misaligned concrete offsets rather than truncating them.
+    """
+    if not use_kernel:
+        return _spans_ref(
+            opcodes, edge_src, out_src, x_words,
+            word_off.astype(jnp.int32), in_width.astype(jnp.int32),
+            span_words,
+        )
+
+    n_in, w = x_words.shape
+    n = opcodes.shape[1]
+    block = pick_block_words(n_in + n, span_words)
+    if span_words % block or w % block:
+        block = span_words  # fall back to one block per span
+    # block | span_words holds here, so offsets that honour the documented
+    # multiple-of-span contract are block-aligned; the kernel's integer
+    # division would silently evaluate the wrong span otherwise.
+    if not isinstance(word_off, jax.core.Tracer):
+        off = np.asarray(word_off)
+        if off.size and (off % block).any():
+            raise ValueError(
+                f"word_off entries must be multiples of span_words"
+                f"={span_words} (kernel block {block}); got {off.tolist()}"
+            )
+    return circuit_eval.eval_population_spans_kernel(
+        opcodes.astype(jnp.int32),
+        edge_src.astype(jnp.int32),
+        out_src.astype(jnp.int32),
+        x_words.astype(jnp.uint32),
+        word_off.astype(jnp.int32),
+        in_width.astype(jnp.int32),
+        span_words=span_words,
+        block_words=block,
+        interpret=(not _on_tpu()) if interpret is None else interpret,
+    )
 
 
 def eval_circuit(

@@ -6,6 +6,8 @@ tests/test_kernels.py over shape/dtype sweeps).
 """
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
@@ -40,6 +42,33 @@ def eval_population_packed(opcodes, edge_src, out_src, x_words):
     dataset is shared."""
     return jax.vmap(eval_circuit_packed, in_axes=(0, 0, 0, None))(
         opcodes, edge_src, out_src, x_words
+    )
+
+
+def eval_circuit_span(
+    opcodes, edge_src, out_src, x_words, word_off, in_width, *, span_words: int
+):
+    """Evaluate one circuit on the ``span_words`` words starting at
+    ``word_off``, with input rows >= ``in_width`` masked to zero (the
+    multi-tenant isolation contract of the spans kernel)."""
+    n_in = x_words.shape[0]
+    x = jax.lax.dynamic_slice(
+        x_words, (0, word_off.astype(jnp.int32)), (n_in, span_words)
+    )
+    row = jnp.arange(n_in, dtype=jnp.int32)[:, None]
+    x = jnp.where(row < in_width, x, jnp.uint32(0))
+    return eval_circuit_packed(opcodes, edge_src, out_src, x)
+
+
+def eval_population_spans_packed(
+    opcodes, edge_src, out_src, x_words, word_off, in_width, *, span_words: int
+):
+    """Per-circuit word spans: circuit p reads words
+    [word_off[p], word_off[p] + span_words) of the shared buffer.  Oracle for
+    `circuit_eval.eval_population_spans_kernel` → uint32[P, O, span_words]."""
+    f = functools.partial(eval_circuit_span, span_words=span_words)
+    return jax.vmap(f, in_axes=(0, 0, 0, None, 0, 0))(
+        opcodes, edge_src, out_src, x_words, word_off, in_width
     )
 
 

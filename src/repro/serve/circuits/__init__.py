@@ -1,0 +1,18 @@
+"""Multi-tenant circuit serving: registry → micro-batcher → fused kernel.
+
+The deployable counterpart of the evolution pipeline: many fitted tiny
+classifiers (tenants) share one `eval_population_spans` launch per serving
+tick.  See `registry` (genome padding / hot add-remove), `server` (the
+micro-batching engine) and `metrics` (QPS / latency / occupancy reports).
+"""
+from repro.serve.circuits.metrics import ServerStats, TickReport
+from repro.serve.circuits.registry import CircuitRegistry, PopulationPlan
+from repro.serve.circuits.server import CircuitServer
+
+__all__ = [
+    "CircuitRegistry",
+    "CircuitServer",
+    "PopulationPlan",
+    "ServerStats",
+    "TickReport",
+]

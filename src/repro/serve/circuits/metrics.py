@@ -1,0 +1,81 @@
+"""Throughput / latency accounting for the circuit serving engine.
+
+Every `CircuitServer.tick()` reports one `TickReport`; `ServerStats`
+accumulates them into the numbers an operator actually watches: QPS,
+rows/s, p50/p99 tick latency, and kernel occupancy (the fraction of
+row-lanes in the fused launch that carried real requests rather than
+word-boundary or span padding).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class TickReport:
+    """What one micro-batch tick did."""
+
+    generation: int        # registry generation served
+    tenants: int           # tenants with pending rows this tick
+    requests: int          # requests completed
+    rows: int              # feature rows predicted
+    launches: int          # fused kernel/oracle launches (0 or 1)
+    span_words: int        # words per tenant span in the fused buffer
+    latency_s: float       # wall-clock tick duration
+    occupancy: float       # rows / (tenants * span_words * 32)
+
+    @property
+    def empty(self) -> bool:
+        return self.rows == 0
+
+
+@dataclasses.dataclass
+class ServerStats:
+    """Running aggregate over ticks (host-side, cheap)."""
+
+    started_at: float = dataclasses.field(default_factory=time.perf_counter)
+    ticks: int = 0
+    empty_ticks: int = 0
+    launches: int = 0
+    requests: int = 0
+    rows: int = 0
+    tick_latencies_s: list = dataclasses.field(default_factory=list)
+    occupancies: list = dataclasses.field(default_factory=list)
+    max_tenants_per_launch: int = 0
+
+    def record(self, report: TickReport) -> None:
+        self.ticks += 1
+        # Requests count even on launch-free ticks: zero-row submissions and
+        # requests failed by a hot remove still complete this tick.
+        self.requests += report.requests
+        if report.empty:
+            self.empty_ticks += 1
+            return
+        self.launches += report.launches
+        self.rows += report.rows
+        self.tick_latencies_s.append(report.latency_s)
+        self.occupancies.append(report.occupancy)
+        self.max_tenants_per_launch = max(
+            self.max_tenants_per_launch, report.tenants
+        )
+
+    def report(self) -> dict:
+        elapsed = time.perf_counter() - self.started_at
+        lat = np.asarray(self.tick_latencies_s or [0.0])
+        occ = np.asarray(self.occupancies or [0.0])
+        return {
+            "ticks": self.ticks,
+            "empty_ticks": self.empty_ticks,
+            "launches": self.launches,
+            "requests": self.requests,
+            "rows": self.rows,
+            "qps": round(self.requests / max(elapsed, 1e-9), 1),
+            "rows_per_s": round(self.rows / max(elapsed, 1e-9), 1),
+            "p50_tick_ms": round(float(np.percentile(lat, 50)) * 1e3, 3),
+            "p99_tick_ms": round(float(np.percentile(lat, 99)) * 1e3, 3),
+            "mean_occupancy": round(float(occ.mean()), 4),
+            "max_tenants_per_launch": self.max_tenants_per_launch,
+        }

@@ -1,0 +1,176 @@
+"""Multi-tenant circuit registry: heterogeneous genomes → one population.
+
+Tenants register fitted `ServableCircuit` artifacts (genome + encoder +
+class map).  The registry pads and index-remaps the heterogeneous genomes
+into the fixed ``(P, n_max)`` tensors `eval_population` /
+`eval_population_spans` expect, so every tenant rides the same fused
+kernel launch:
+
+  * input ids ``< I_t`` stay put (tenant bits live in rows ``[0, I_t)`` of
+    the shared ``u32[I_max, W]`` buffer); function-node ids shift by
+    ``I_max - I_t`` so the node table starts after the widest tenant's
+    inputs;
+  * pad nodes are ``BUF`` gates reading id 0 — semantically inert and
+    never tapped;
+  * pad output taps read id 0; the per-tenant ``out_width`` tells the
+    decoder how many output bits are real.
+
+Mutation (add/remove/replace) bumps a monotonic ``generation``; the stacked
+`PopulationPlan` is rebuilt lazily and tagged with the generation it was
+built from, so the serving engine knows exactly when its gathered tensors —
+and any jit cache keyed on their shapes — must be refreshed.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Iterator, NamedTuple
+
+import numpy as np
+
+from repro.core import gates
+from repro.core.api import ServableCircuit
+from repro.core.genome import opcodes as genome_opcodes
+from repro.core.genome import validate_genome
+
+
+class PopulationPlan(NamedTuple):
+    """Stacked, kernel-ready view of every registered tenant.
+
+    Immutable snapshot: ``circuits`` carries the exact artifacts the stacked
+    tensors were built from, so a consumer mid-tick never observes a
+    half-updated registry."""
+
+    tenants: tuple[str, ...]     # slot order; slot i serves tenants[i]
+    circuits: tuple[ServableCircuit, ...]  # artifact behind each slot
+    opcodes: np.ndarray          # i32[P, n_max] raw gate opcodes
+    edge_src: np.ndarray         # i32[P, n_max, 2] remapped operand ids
+    out_src: np.ndarray          # i32[P, O_max] remapped output taps
+    in_width: np.ndarray         # i32[P] live input bits per tenant
+    out_width: np.ndarray        # i32[P] live output bits per tenant
+    n_classes: np.ndarray        # i32[P]
+    generation: int              # registry generation this plan was built at
+
+    @property
+    def n_tenants(self) -> int:
+        return len(self.tenants)
+
+    @property
+    def n_inputs_max(self) -> int:
+        return 0 if self.opcodes.size == 0 else int(self.in_width.max())
+
+    def slot(self, tenant: str) -> int:
+        return self.tenants.index(tenant)
+
+
+def _pad_genome(
+    sc: ServableCircuit, i_max: int, n_max: int, o_max: int
+) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
+    """Remap one tenant's genome into the (i_max, n_max, o_max) id space."""
+    i_t = sc.spec.n_inputs
+    n_t = sc.spec.n_nodes
+    o_t = sc.spec.n_outputs
+
+    def remap(ids: np.ndarray) -> np.ndarray:
+        return np.where(ids < i_t, ids, ids - i_t + i_max)
+
+    opc = np.full(n_max, gates.BUF_A, np.int32)
+    opc[:n_t] = np.asarray(genome_opcodes(sc.genome, sc.spec), np.int32)
+    edge = np.zeros((n_max, 2), np.int32)
+    edge[:n_t] = remap(np.asarray(sc.genome.edge_src, np.int64))
+    outs = np.zeros(o_max, np.int32)
+    outs[:o_t] = remap(np.asarray(sc.genome.out_src, np.int64))
+    return opc, edge, outs
+
+
+class CircuitRegistry:
+    """Thread-safe tenant table with hot add/remove and lazy plan builds."""
+
+    def __init__(self):
+        self._lock = threading.Lock()
+        self._entries: dict[str, ServableCircuit] = {}
+        self._generation = 0
+        self._plan: PopulationPlan | None = None
+
+    # -- mutation ------------------------------------------------------
+    def add(self, tenant: str, circuit: ServableCircuit,
+            replace: bool = False) -> int:
+        """Register (or with replace=True, hot-swap) a tenant's circuit.
+        Returns the new registry generation."""
+        if not validate_genome(circuit.genome, circuit.spec):
+            raise ValueError(f"tenant {tenant!r}: genome fails validation")
+        with self._lock:
+            if tenant in self._entries and not replace:
+                raise KeyError(f"tenant {tenant!r} already registered")
+            self._entries[tenant] = circuit
+            self._generation += 1
+            return self._generation
+
+    def remove(self, tenant: str) -> int:
+        with self._lock:
+            del self._entries[tenant]
+            self._generation += 1
+            return self._generation
+
+    # -- queries -------------------------------------------------------
+    def __contains__(self, tenant: str) -> bool:
+        return tenant in self._entries
+
+    def __len__(self) -> int:
+        return len(self._entries)
+
+    def __iter__(self) -> Iterator[str]:
+        return iter(tuple(self._entries))
+
+    def get(self, tenant: str) -> ServableCircuit:
+        return self._entries[tenant]
+
+    @property
+    def generation(self) -> int:
+        return self._generation
+
+    def plan(self) -> PopulationPlan:
+        """Kernel-ready stacked tensors; rebuilt only when stale."""
+        with self._lock:
+            if self._plan is not None and (
+                self._plan.generation == self._generation
+            ):
+                return self._plan
+            self._plan = self._build_plan()
+            return self._plan
+
+    def _build_plan(self) -> PopulationPlan:
+        tenants = tuple(self._entries)
+        circuits = [self._entries[t] for t in tenants]
+        if not circuits:
+            return PopulationPlan(
+                tenants=(),
+                circuits=(),
+                opcodes=np.zeros((0, 0), np.int32),
+                edge_src=np.zeros((0, 0, 2), np.int32),
+                out_src=np.zeros((0, 0), np.int32),
+                in_width=np.zeros(0, np.int32),
+                out_width=np.zeros(0, np.int32),
+                n_classes=np.zeros(0, np.int32),
+                generation=self._generation,
+            )
+        i_max = max(c.spec.n_inputs for c in circuits)
+        n_max = max(c.spec.n_nodes for c in circuits)
+        o_max = max(c.spec.n_outputs for c in circuits)
+        padded = [_pad_genome(c, i_max, n_max, o_max) for c in circuits]
+        return PopulationPlan(
+            tenants=tenants,
+            circuits=tuple(circuits),
+            opcodes=np.stack([p[0] for p in padded]),
+            edge_src=np.stack([p[1] for p in padded]),
+            out_src=np.stack([p[2] for p in padded]),
+            in_width=np.asarray(
+                [c.spec.n_inputs for c in circuits], np.int32
+            ),
+            out_width=np.asarray(
+                [c.spec.n_outputs for c in circuits], np.int32
+            ),
+            n_classes=np.asarray(
+                [c.n_classes for c in circuits], np.int32
+            ),
+            generation=self._generation,
+        )

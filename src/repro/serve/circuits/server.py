@@ -1,0 +1,225 @@
+"""Micro-batching inference engine over the fused population kernel.
+
+Request flow (one `tick()`):
+
+  1. snapshot every tenant's pending float-feature rows;
+  2. per tenant, run the encode→bit-pack pipeline once over all its pending
+     requests (`encoding.encode_batched` + `pack_bits_rows`);
+  3. fuse all tenants into one padded ``u32[I_max, K·span]`` word buffer —
+     tenant k owns the word span ``[k·span, (k+1)·span)``;
+  4. dispatch a single `eval_population_spans` launch: circuit k evaluates
+     only its own span, with input rows above its true width masked off;
+  5. decode each tenant's live output bits back to class ids and scatter
+     them to the originating requests.
+
+The engine is generation-aware: when the registry mutates (hot add/remove),
+the next tick picks up the new `PopulationPlan`, refreshes its device-side
+copy of the stacked genome tensors, and jax recompiles only if the padded
+shapes actually changed.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import encoding as E
+from repro.core.api import decode_predictions
+from repro.kernels import ops as kernel_ops
+from repro.serve.circuits.metrics import ServerStats, TickReport
+from repro.serve.circuits.registry import CircuitRegistry, PopulationPlan
+
+
+@dataclasses.dataclass
+class _Pending:
+    ticket: int
+    x: np.ndarray  # float32[r, F_tenant]
+
+
+class CircuitServer:
+    """Synchronous micro-batching server over a `CircuitRegistry`.
+
+    ``submit()`` enqueues rows and returns a ticket; ``tick()`` serves every
+    pending row in one fused launch; ``result()`` collects predictions.
+    ``predict()`` is the one-shot convenience wrapper.  ``span_align`` pads
+    each tenant's word span to a multiple (set 128 on real TPUs so spans
+    stay lane-aligned; the default 1 keeps CPU/interpret ticks tight).
+    """
+
+    def __init__(
+        self,
+        registry: CircuitRegistry,
+        *,
+        use_kernel: bool = False,
+        interpret: bool | None = None,
+        span_align: int = 1,
+    ):
+        self.registry = registry
+        self.use_kernel = use_kernel
+        self.interpret = interpret
+        self.span_align = max(int(span_align), 1)
+        self.stats = ServerStats()
+        self._lock = threading.Lock()
+        self._pending: dict[str, list[_Pending]] = {}
+        self._results: dict[int, np.ndarray] = {}
+        self._next_ticket = 0
+        # generation-tagged device copy of the stacked plan tensors
+        self._plan: PopulationPlan | None = None
+        self._dev: tuple | None = None
+
+    # -- request interface ---------------------------------------------
+    def submit(self, tenant: str, x: np.ndarray) -> int:
+        """Enqueue rows for one tenant; returns a result ticket."""
+        if tenant not in self.registry:
+            raise KeyError(f"unknown tenant {tenant!r}")
+        x = np.atleast_2d(np.asarray(x, np.float32))
+        want = self.registry.get(tenant).encoder.n_features
+        if x.shape[1] != want:
+            raise ValueError(
+                f"tenant {tenant!r} expects {want} features, got {x.shape[1]}"
+            )
+        with self._lock:
+            ticket = self._next_ticket
+            self._next_ticket += 1
+            self._pending.setdefault(tenant, []).append(_Pending(ticket, x))
+        return ticket
+
+    def result(self, ticket: int) -> np.ndarray:
+        """Class ids for a served ticket (KeyError if not yet ticked).
+
+        Re-raises per-request serving errors (e.g. the tenant was removed
+        or hot-swapped incompatibly between submit and tick)."""
+        out = self._results.pop(ticket)
+        if isinstance(out, Exception):
+            raise out
+        return out
+
+    def predict(self, tenant: str, x: np.ndarray) -> np.ndarray:
+        """submit + tick + result in one call (single-tenant convenience)."""
+        ticket = self.submit(tenant, x)
+        self.tick()
+        return self.result(ticket)
+
+    def pending_rows(self) -> int:
+        with self._lock:
+            return sum(
+                p.x.shape[0] for reqs in self._pending.values() for p in reqs
+            )
+
+    # -- the fused tick ------------------------------------------------
+    def _refresh_plan(self) -> tuple[PopulationPlan, tuple]:
+        plan = self.registry.plan()
+        if self._plan is None or plan.generation != self._plan.generation:
+            self._plan = plan
+            self._dev = (
+                jnp.asarray(plan.opcodes),
+                jnp.asarray(plan.edge_src),
+                jnp.asarray(plan.out_src),
+                jnp.asarray(plan.in_width),
+            )
+        return self._plan, self._dev
+
+    def tick(self) -> TickReport:
+        """Serve every pending request in at most one fused launch."""
+        t0 = time.perf_counter()
+        # Snapshot pending BEFORE the plan: any tenant that reached the
+        # queue was registered at submit time, so a plan refreshed now can
+        # only be missing it if a concurrent remove won — and everything
+        # below reads the immutable plan snapshot, never the live registry.
+        with self._lock:
+            batch = [(t, reqs) for t, reqs in self._pending.items() if reqs]
+            self._pending = {}
+        plan, dev = self._refresh_plan()
+
+        # Encode each tenant's pending rows in one vectorized sweep.
+        work = []  # (slot, reqs, bits, offsets)
+        n_requests = 0
+        for tenant, reqs in batch:
+            # The tenant may have been removed (or hot-swapped to a
+            # different feature width) between submit and tick; fail those
+            # requests individually instead of poisoning the whole tick.
+            enc = None
+            if tenant in plan.tenants:
+                enc = plan.circuits[plan.slot(tenant)].encoder
+            if enc is None or any(
+                p.x.shape[1] != enc.n_features for p in reqs
+            ):
+                why = ("removed" if enc is None
+                       else "hot-swapped to a different feature width")
+                err = KeyError(
+                    f"tenant {tenant!r} was {why} with requests pending"
+                )
+                n_requests += len(reqs)
+                for p in reqs:
+                    self._results[p.ticket] = err
+                continue
+            bits, offsets = E.encode_batched(enc, [p.x for p in reqs])
+            n_requests += len(reqs)
+            if offsets[-1] == 0:  # zero-row requests complete immediately
+                for p in reqs:
+                    self._results[p.ticket] = np.zeros(0, np.int64)
+                continue
+            work.append((plan.slot(tenant), reqs, bits, offsets))
+
+        if not work:
+            report = TickReport(
+                generation=plan.generation, tenants=0, requests=n_requests,
+                rows=0, launches=0, span_words=0,
+                latency_s=time.perf_counter() - t0, occupancy=0.0,
+            )
+            self.stats.record(report)
+            return report
+
+        # Fuse: tenant k owns words [k*span, (k+1)*span) of one buffer.
+        # Spans are bucketed to powers of two so jit sees a bounded set of
+        # shapes across ticks instead of recompiling per traffic level.
+        k_active = len(work)
+        rows = [int(offsets[-1]) for _, _, _, offsets in work]
+        span = max(E.n_words(r) for r in rows)
+        span = 1 << (span - 1).bit_length()
+        span = -(-span // self.span_align) * self.span_align
+        i_max = int(plan.in_width.max())
+        x_buf = np.zeros((i_max, k_active * span), np.uint32)
+        for k, (slot, _, bits, offsets) in enumerate(work):
+            w_t = E.n_words(int(offsets[-1]))
+            packed = E.pack_bits_rows(bits, w_t)
+            x_buf[: packed.shape[0], k * span : k * span + w_t] = packed
+
+        slots = np.asarray([w[0] for w in work])
+        opc, edge, outs, in_w = dev
+        out = kernel_ops.eval_population_spans(
+            opc[slots], edge[slots], outs[slots],
+            jnp.asarray(x_buf),
+            jnp.arange(k_active, dtype=jnp.int32) * span,
+            in_w[slots],
+            span_words=span,
+            use_kernel=self.use_kernel,
+            interpret=self.interpret,
+        )
+        out = np.asarray(out)  # u32[K, O_max, span]
+
+        # Scatter class ids back to the originating requests.
+        for k, (slot, reqs, _, offsets) in enumerate(work):
+            o_t = int(plan.out_width[slot])
+            ids = decode_predictions(
+                out[k, :o_t], int(offsets[-1]), int(plan.n_classes[slot])
+            )
+            for p, lo, hi in zip(reqs, offsets[:-1], offsets[1:]):
+                self._results[p.ticket] = ids[lo:hi]
+
+        total_rows = sum(rows)
+        report = TickReport(
+            generation=plan.generation,
+            tenants=k_active,
+            requests=n_requests,
+            rows=total_rows,
+            launches=1,
+            span_words=span,
+            latency_s=time.perf_counter() - t0,
+            occupancy=total_rows / (k_active * span * E.WORD),
+        )
+        self.stats.record(report)
+        return report

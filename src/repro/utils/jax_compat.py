@@ -1,0 +1,46 @@
+"""Portability shims for jax APIs that moved between 0.4.x and 0.7.x.
+
+The repo targets current jax idioms (`jax.shard_map` with ``check_vma``,
+`jax.make_mesh` with ``axis_types``); this module lets the same call sites
+run on the 0.4.x line too, where shard_map still lives under
+`jax.experimental` (with the ``check_rep`` spelling) and `make_mesh` has no
+``axis_types`` parameter.  Import from here instead of calling the moved
+APIs directly.
+"""
+from __future__ import annotations
+
+import jax
+
+try:  # jax >= 0.5
+    from jax.sharding import AxisType as _AxisType
+except ImportError:  # pragma: no cover - depends on installed jax
+    _AxisType = None
+
+
+def make_mesh(axis_shapes, axis_names) -> "jax.sharding.Mesh":
+    """`jax.make_mesh` with explicit-Auto axis types where supported."""
+    if _AxisType is not None:
+        return jax.make_mesh(
+            axis_shapes, axis_names,
+            axis_types=(_AxisType.Auto,) * len(axis_names),
+        )
+    return jax.make_mesh(axis_shapes, axis_names)
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = True):
+    """`jax.shard_map`, falling back to the experimental spelling.
+
+    ``check_vma`` maps onto the old ``check_rep`` flag — both toggle the
+    per-axis replication/varying-mesh-axes check.
+    """
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(
+            f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            check_vma=check_vma,
+        )
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(
+        f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+        check_rep=check_vma,
+    )

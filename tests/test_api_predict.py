@@ -1,0 +1,89 @@
+"""ServableCircuit / AutoTinyClassifier predict-path regressions.
+
+`pack_bits_rows` pads the row axis to the 32-bit word boundary; the circuit
+computes garbage for the pad rows, and `decode_predictions` must trim them
+explicitly.  These tests pin that behaviour for non-multiple-of-32 row
+counts (the silent-slice bug class)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import encoding as E
+from repro.core import gates
+from repro.core.api import AutoTinyClassifier, ServableCircuit, decode_predictions
+from repro.core.genome import CircuitSpec, init_genome, opcodes
+from repro.kernels import ref
+
+
+def make_servable(seed=0, n_feats=5, bits=2, n_nodes=40, n_classes=3):
+    rng = np.random.RandomState(seed)
+    enc = E.fit_encoder(
+        rng.randn(150, n_feats).astype(np.float32),
+        E.EncodingConfig("quantize", bits),
+    )
+    n_out = max(1, int(np.ceil(np.log2(max(n_classes, 2)))))
+    spec = CircuitSpec(enc.n_bits_total, n_nodes, n_out,
+                       gates.FUNCTION_SETS["full"])
+    return ServableCircuit(
+        spec, init_genome(jax.random.key(seed), spec), enc, n_classes
+    )
+
+
+@pytest.mark.parametrize("rows", [1, 31, 32, 33, 37, 64, 65, 95])
+def test_predict_trims_word_boundary_padding(rows):
+    """Predictions for R rows match the unpacked row-wise oracle exactly —
+    no pad-row garbage may leak for any R relative to the 32-row word."""
+    sc = make_servable()
+    rng = np.random.RandomState(rows)
+    x = rng.randn(rows, sc.encoder.n_features).astype(np.float32)
+    got = sc.predict(x)
+    assert got.shape == (rows,)
+
+    bits = E.encode(sc.encoder, x)
+    row_out = np.asarray(ref.eval_circuit_rows(
+        opcodes(sc.genome, sc.spec), sc.genome.edge_src,
+        sc.genome.out_src, bits,
+    ))
+    want = (row_out * (1 << np.arange(sc.spec.n_outputs))).sum(axis=1)
+    np.testing.assert_array_equal(got, np.minimum(want, sc.n_classes - 1))
+
+
+def test_predict_prefix_consistency():
+    """Row r's prediction must not depend on how many pad rows follow it."""
+    sc = make_servable(seed=7)
+    rng = np.random.RandomState(7)
+    x = rng.randn(70, sc.encoder.n_features).astype(np.float32)
+    full = sc.predict(x)
+    for r in (1, 31, 33, 64, 70):
+        np.testing.assert_array_equal(sc.predict(x[:r]), full[:r])
+
+
+def test_decode_predictions_trims_and_clamps():
+    # 1 output bit, 40 rows → 2 words; pad rows all set (worst garbage)
+    words = np.full((1, 2), 0xFFFFFFFF, np.uint32)
+    ids = decode_predictions(words, 40, 2)
+    assert ids.shape == (40,)
+    assert (ids <= 1).all()
+    # 2 output bits decoding codes ≥ n_classes clamp to the last class
+    words2 = np.full((2, 1), 0xFFFFFFFF, np.uint32)  # code 3 everywhere
+    np.testing.assert_array_equal(decode_predictions(words2, 5, 3),
+                                  np.full(5, 2))
+
+
+def test_autotc_predict_delegates_to_servable():
+    """The classifier facade and the exported artifact share one path."""
+    sc = make_servable(seed=3)
+    clf = AutoTinyClassifier()
+    clf.spec_, clf.genome_ = sc.spec, sc.genome
+    clf.encoder_, clf.n_classes_ = sc.encoder, sc.n_classes
+    rng = np.random.RandomState(3)
+    x = rng.randn(37, sc.encoder.n_features).astype(np.float32)
+    np.testing.assert_array_equal(clf.predict(x), sc.predict(x))
+    exported = clf.to_servable()
+    assert exported.n_classes == sc.n_classes
+    np.testing.assert_array_equal(exported.predict(x), sc.predict(x))
+
+
+def test_to_servable_requires_fit():
+    with pytest.raises(RuntimeError):
+        AutoTinyClassifier().to_servable()

@@ -1,23 +1,20 @@
-"""Encoders and bit packing (paper §5.2) — property-based."""
+"""Encoders and bit packing (paper §5.2) — deterministic checks.
+
+The hypothesis property sweeps live in test_core_encoding_properties.py so
+this module collects even where the optional dev dependency is missing.
+"""
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp
 
 from repro.core import encoding as E
 
 
-@settings(max_examples=25, deadline=None)
-@given(
-    strategy=st.sampled_from(E.STRATEGIES),
-    bits=st.integers(1, 4),
-    rows=st.integers(2, 200),
-    feats=st.integers(1, 8),
-    seed=st.integers(0, 1000),
-)
-def test_encode_shape_and_binary(strategy, bits, rows, feats, seed):
-    rng = np.random.RandomState(seed)
+@pytest.mark.parametrize("strategy", E.STRATEGIES)
+@pytest.mark.parametrize("bits,rows,feats", [(2, 97, 3), (4, 40, 6)])
+def test_encode_shape_and_binary(strategy, bits, rows, feats):
+    rng = np.random.RandomState(rows)
     x = rng.randn(rows, feats).astype(np.float32)
     enc = E.fit_encoder(x, E.EncodingConfig(strategy, bits))
     out = E.encode(enc, x)
@@ -25,16 +22,33 @@ def test_encode_shape_and_binary(strategy, bits, rows, feats, seed):
     assert set(np.unique(out)) <= {0, 1}
 
 
-@settings(max_examples=25, deadline=None)
-@given(rows=st.integers(1, 300), nbits=st.integers(1, 20),
-       seed=st.integers(0, 1000))
-def test_pack_unpack_roundtrip(rows, nbits, seed):
-    rng = np.random.RandomState(seed)
+@pytest.mark.parametrize("rows,nbits", [(1, 1), (31, 5), (32, 20), (300, 7)])
+def test_pack_unpack_roundtrip(rows, nbits):
+    rng = np.random.RandomState(nbits)
     bits = rng.randint(0, 2, (rows, nbits)).astype(np.uint8)
     w = E.n_words(rows)
     words = E.pack_bits_rows(bits, w)
     back = np.asarray(E.unpack_words(jnp.asarray(words), rows))
     assert np.array_equal(back.T, bits)
+
+
+def test_encode_batched_matches_per_block():
+    rng = np.random.RandomState(3)
+    enc = E.fit_encoder(rng.randn(100, 5).astype(np.float32),
+                        E.EncodingConfig("quantile", 2))
+    blocks = [rng.randn(r, 5).astype(np.float32) for r in (4, 0, 17, 1)]
+    bits, offsets = E.encode_batched(enc, blocks)
+    assert bits.shape == (22, 10)
+    assert list(offsets) == [0, 4, 4, 21, 22]
+    for blk, lo, hi in zip(blocks, offsets[:-1], offsets[1:]):
+        assert np.array_equal(bits[lo:hi], E.encode(enc, blk))
+
+
+def test_encode_batched_empty():
+    enc = E.fit_encoder(np.zeros((10, 2), np.float32),
+                        E.EncodingConfig("quantize", 2))
+    bits, offsets = E.encode_batched(enc, [])
+    assert bits.shape == (0, 4) and list(offsets) == [0]
 
 
 def test_gray_code_adjacency():

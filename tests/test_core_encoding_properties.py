@@ -1,0 +1,61 @@
+"""Property-based encoder/packing sweeps (paper §5.2).
+
+Requires the optional `hypothesis` dev dependency (requirements-dev.txt);
+the module skips cleanly where it is not installable.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import encoding as E  # noqa: E402
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    strategy=st.sampled_from(E.STRATEGIES),
+    bits=st.integers(1, 4),
+    rows=st.integers(2, 200),
+    feats=st.integers(1, 8),
+    seed=st.integers(0, 1000),
+)
+def test_encode_shape_and_binary(strategy, bits, rows, feats, seed):
+    rng = np.random.RandomState(seed)
+    x = rng.randn(rows, feats).astype(np.float32)
+    enc = E.fit_encoder(x, E.EncodingConfig(strategy, bits))
+    out = E.encode(enc, x)
+    assert out.shape == (rows, feats * bits)
+    assert set(np.unique(out)) <= {0, 1}
+
+
+@settings(max_examples=25, deadline=None)
+@given(rows=st.integers(1, 300), nbits=st.integers(1, 20),
+       seed=st.integers(0, 1000))
+def test_pack_unpack_roundtrip(rows, nbits, seed):
+    rng = np.random.RandomState(seed)
+    bits = rng.randint(0, 2, (rows, nbits)).astype(np.uint8)
+    w = E.n_words(rows)
+    words = E.pack_bits_rows(bits, w)
+    back = np.asarray(E.unpack_words(jnp.asarray(words), rows))
+    assert np.array_equal(back.T, bits)
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    n_blocks=st.integers(0, 5),
+    feats=st.integers(1, 6),
+    seed=st.integers(0, 1000),
+)
+def test_encode_batched_matches_per_block(n_blocks, feats, seed):
+    rng = np.random.RandomState(seed)
+    enc = E.fit_encoder(rng.randn(50, feats).astype(np.float32),
+                        E.EncodingConfig("quantize", 2))
+    blocks = [rng.randn(rng.randint(0, 20), feats).astype(np.float32)
+              for _ in range(n_blocks)]
+    bits, offsets = E.encode_batched(enc, blocks)
+    assert offsets[-1] == sum(b.shape[0] for b in blocks)
+    for blk, lo, hi in zip(blocks, offsets[:-1], offsets[1:]):
+        assert np.array_equal(bits[lo:hi], E.encode(enc, blk))

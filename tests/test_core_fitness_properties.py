@@ -1,0 +1,32 @@
+"""Property-based fitness sweep (requires the optional `hypothesis` dev
+dependency, requirements-dev.txt; skips cleanly where missing)."""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+import jax.numpy as jnp  # noqa: E402
+
+from repro.core import encoding as E  # noqa: E402
+from repro.core import fitness as F  # noqa: E402
+
+
+@settings(max_examples=20, deadline=None)
+@given(rows=st.integers(5, 400), classes=st.integers(2, 6),
+       seed=st.integers(0, 10_000))
+def test_balanced_accuracy_packed_equals_reference(rows, classes, seed):
+    """Packed popcount fitness == unpacked per-row reference — the key
+    invariant that makes sharded (psum) fitness exact."""
+    rng = np.random.RandomState(seed)
+    n_out = max(1, int(np.ceil(np.log2(classes))))
+    y = rng.randint(0, classes, rows)
+    pred = rng.randint(0, 2 ** n_out, rows)  # may predict invalid codes
+    pred_bits = ((pred[:, None] >> np.arange(n_out)) & 1).astype(np.uint8)
+    w = E.n_words(rows)
+    out_words = jnp.asarray(E.pack_bits_rows(pred_bits, w))
+    data = E.pack_dataset(np.zeros((rows, 1), np.uint8), y, classes, n_out)
+    mask = data.mask_words
+    ba = float(F.balanced_accuracy(out_words, data, mask))
+    ba_ref = F.balanced_accuracy_rows(pred, y, np.ones(rows, bool), classes)
+    assert ba == pytest.approx(ba_ref, abs=1e-6)

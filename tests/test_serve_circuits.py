@@ -1,0 +1,279 @@
+"""Multi-tenant circuit serving subsystem (registry + micro-batcher)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import encoding as E
+from repro.core import gates
+from repro.core.api import ServableCircuit
+from repro.core.genome import CircuitSpec, init_genome, opcodes
+from repro.kernels import ops as kernel_ops
+from repro.kernels import ref
+from repro.serve.circuits import CircuitRegistry, CircuitServer
+
+RNG = np.random.RandomState(0)
+
+# (features, bits/input, gates, classes) — deliberately heterogeneous
+TENANT_SHAPES = [(4, 2, 40, 2), (7, 4, 80, 3), (3, 2, 25, 4), (10, 4, 120, 5)]
+
+
+def make_servable(seed, n_feats, bits, n_nodes, n_classes) -> ServableCircuit:
+    enc = E.fit_encoder(
+        RNG.randn(200, n_feats).astype(np.float32),
+        E.EncodingConfig("quantile", bits),
+    )
+    n_out = max(1, int(np.ceil(np.log2(max(n_classes, 2)))))
+    spec = CircuitSpec(enc.n_bits_total, n_nodes, n_out,
+                       gates.FUNCTION_SETS["full"])
+    return ServableCircuit(
+        spec, init_genome(jax.random.key(seed), spec), enc, n_classes
+    )
+
+
+@pytest.fixture
+def registry():
+    reg = CircuitRegistry()
+    for i, shape in enumerate(TENANT_SHAPES):
+        reg.add(f"t{i}", make_servable(i, *shape))
+    return reg
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+def test_registry_add_remove_recompile(registry):
+    gen0 = registry.generation
+    plan0 = registry.plan()
+    assert plan0.generation == gen0
+    assert plan0.n_tenants == len(TENANT_SHAPES)
+    # plan is cached until the registry mutates
+    assert registry.plan() is plan0
+
+    registry.add("extra", make_servable(99, 5, 2, 30, 2))
+    assert registry.generation == gen0 + 1
+    plan1 = registry.plan()
+    assert plan1 is not plan0 and plan1.n_tenants == plan0.n_tenants + 1
+
+    registry.remove("extra")
+    plan2 = registry.plan()
+    assert plan2.n_tenants == plan0.n_tenants
+    assert plan2.generation == gen0 + 2
+
+    with pytest.raises(KeyError):
+        registry.add("t0", make_servable(1, 4, 2, 40, 2))
+    registry.add("t0", make_servable(1, 4, 2, 40, 2), replace=True)
+    assert registry.generation == gen0 + 3
+
+
+def test_registry_plan_padding_is_semantically_inert(registry):
+    """Padded plan rows evaluate identically to each tenant's own genome."""
+    plan = registry.plan()
+    i_max = plan.n_inputs_max
+    for tenant in registry:
+        sc = registry.get(tenant)
+        k = plan.slot(tenant)
+        bits = RNG.randint(0, 2, (64, sc.spec.n_inputs)).astype(np.uint8)
+        w = E.n_words(64)
+        # native evaluation in the tenant's own id space
+        native = ref.eval_circuit_packed(
+            opcodes(sc.genome, sc.spec), sc.genome.edge_src,
+            sc.genome.out_src, E.pack_bits_rows(bits, w),
+        )
+        # padded evaluation in the shared id space
+        wide = np.zeros((i_max, w), np.uint32)
+        wide[: sc.spec.n_inputs] = E.pack_bits_rows(bits, w)
+        padded = ref.eval_circuit_packed(
+            jnp.asarray(plan.opcodes[k]), jnp.asarray(plan.edge_src[k]),
+            jnp.asarray(plan.out_src[k]), jnp.asarray(wide),
+        )
+        np.testing.assert_array_equal(
+            np.asarray(padded)[: sc.spec.n_outputs], np.asarray(native)
+        )
+
+
+def test_empty_registry_plan():
+    plan = CircuitRegistry().plan()
+    assert plan.n_tenants == 0 and plan.opcodes.shape[0] == 0
+
+
+# ---------------------------------------------------------------------------
+# Spans kernel
+# ---------------------------------------------------------------------------
+
+def test_spans_kernel_matches_ref():
+    spec = CircuitSpec(12, 24, 3, gates.FUNCTION_SETS["extended"])
+    gs = [init_genome(jax.random.key(i), spec) for i in range(5)]
+    opc = jnp.stack([opcodes(g, spec) for g in gs])
+    es = jnp.stack([g.edge_src for g in gs])
+    osrc = jnp.stack([g.out_src for g in gs])
+    span = 2
+    xw = jnp.asarray(
+        RNG.randint(0, 2**32, (12, 5 * span), dtype=np.uint64)
+        .astype(np.uint32)
+    )
+    woff = jnp.arange(5, dtype=jnp.int32) * span
+    iw = jnp.asarray(RNG.randint(1, 13, 5).astype(np.int32))
+    a = kernel_ops.eval_population_spans(
+        opc, es, osrc, xw, woff, iw, span_words=span, use_kernel=False
+    )
+    b = kernel_ops.eval_population_spans(
+        opc, es, osrc, xw, woff, iw, span_words=span, use_kernel=True
+    )
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_spans_input_width_masking_isolates_tenants():
+    """Bits above in_width must be invisible, even to a genome that reads
+    them — the tenant-isolation contract of the fused buffer."""
+    spec = CircuitSpec(8, 10, 2, gates.FUNCTION_SETS["full"])
+    g = init_genome(jax.random.key(0), spec)
+    opc, es, osrc = opcodes(g, spec)[None], g.edge_src[None], g.out_src[None]
+    iw = jnp.asarray([5], jnp.int32)  # only rows [0, 5) are live
+    woff = jnp.asarray([0], jnp.int32)
+    base = RNG.randint(0, 2**32, (8, 4), dtype=np.uint64).astype(np.uint32)
+    poisoned = base.copy()
+    poisoned[5:] = 0xDEADBEEF  # another tenant's bits / garbage
+    clean = base.copy()
+    clean[5:] = 0
+    for use_kernel in (False, True):
+        a = kernel_ops.eval_population_spans(
+            opc, es, osrc, jnp.asarray(poisoned), woff, iw,
+            span_words=4, use_kernel=use_kernel,
+        )
+        b = kernel_ops.eval_population_spans(
+            opc, es, osrc, jnp.asarray(clean), woff, iw,
+            span_words=4, use_kernel=use_kernel,
+        )
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_spans_kernel_rejects_misaligned_offsets():
+    """Concrete word offsets that break the multiple-of-span contract must
+    raise instead of silently evaluating a truncated-offset span."""
+    spec = CircuitSpec(6, 8, 1, gates.FUNCTION_SETS["full"])
+    g = init_genome(jax.random.key(0), spec)
+    xw = jnp.zeros((6, 8), jnp.uint32)
+    with pytest.raises(ValueError, match="multiples of span_words"):
+        kernel_ops.eval_population_spans(
+            opcodes(g, spec)[None], g.edge_src[None], g.out_src[None],
+            xw, jnp.asarray([3], jnp.int32), jnp.asarray([6], jnp.int32),
+            span_words=4, use_kernel=True,
+        )
+
+
+# ---------------------------------------------------------------------------
+# Server
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("use_kernel", [False, True])
+def test_server_matches_per_model_predict(registry, use_kernel):
+    """Mixed-width tenants fused into one launch, bit-identical results."""
+    server = CircuitServer(registry, use_kernel=use_kernel)
+    tickets = {}
+    for i, tenant in enumerate(registry):
+        n_feats = registry.get(tenant).encoder.n_features
+        x = RNG.randn(5 + 19 * i, n_feats).astype(np.float32)
+        tickets[tenant] = (server.submit(tenant, x), x)
+    report = server.tick()
+    assert report.launches == 1
+    assert report.tenants == len(TENANT_SHAPES) >= 4
+    assert report.rows == sum(x.shape[0] for _, x in tickets.values())
+    for tenant, (ticket, x) in tickets.items():
+        got = server.result(ticket)
+        np.testing.assert_array_equal(got, registry.get(tenant).predict(x))
+
+
+def test_server_many_requests_per_tenant(registry):
+    """Several queued requests per tenant decode back to the right rows."""
+    server = CircuitServer(registry)
+    per_req = {}
+    for tenant in registry:
+        n_feats = registry.get(tenant).encoder.n_features
+        for r in (1, 33, 7):  # straddles the 32-row word boundary
+            x = RNG.randn(r, n_feats).astype(np.float32)
+            per_req[server.submit(tenant, x)] = (tenant, x)
+    report = server.tick()
+    assert report.launches == 1
+    for ticket, (tenant, x) in per_req.items():
+        np.testing.assert_array_equal(
+            server.result(ticket), registry.get(tenant).predict(x)
+        )
+
+
+def test_server_empty_tick_is_noop(registry):
+    server = CircuitServer(registry)
+    report = server.tick()
+    assert report.empty and report.launches == 0 and report.rows == 0
+    assert server.stats.report()["launches"] == 0
+    # zero-row submissions complete without a launch
+    t = server.submit("t0", np.zeros((0, 4), np.float32))
+    report = server.tick()
+    assert report.launches == 0 and report.requests == 1
+    assert server.result(t).shape == (0,)
+    # launch-free ticks still count completed requests in the aggregate
+    assert server.stats.report()["requests"] == 1
+
+
+def test_server_hot_add_remove_mid_serve(registry):
+    server = CircuitServer(registry)
+    x0 = RNG.randn(11, 4).astype(np.float32)
+    expect0 = registry.get("t0").predict(x0)
+    np.testing.assert_array_equal(server.predict("t0", x0), expect0)
+    gen_before = server.stats.ticks
+
+    # hot-add a wider tenant than anything registered — I_max/O_max grow
+    wide = make_servable(123, 16, 4, 200, 6)
+    registry.add("wide", wide)
+    xw = RNG.randn(40, 16).astype(np.float32)
+    ta = server.submit("t0", x0)
+    tb = server.submit("wide", xw)
+    report = server.tick()
+    assert report.tenants == 2 and report.launches == 1
+    np.testing.assert_array_equal(server.result(ta), expect0)
+    np.testing.assert_array_equal(server.result(tb), wide.predict(xw))
+
+    registry.remove("wide")
+    np.testing.assert_array_equal(server.predict("t0", x0), expect0)
+    assert server.stats.ticks == gen_before + 2
+    with pytest.raises(KeyError):
+        server.submit("wide", xw)
+
+
+def test_server_remove_with_pending_does_not_poison_tick(registry):
+    """Requests orphaned by a hot remove fail individually; everyone else
+    in the same tick is still served."""
+    server = CircuitServer(registry)
+    x0 = RNG.randn(6, 4).astype(np.float32)
+    t_live = server.submit("t0", x0)
+    t_dead = server.submit("t1", RNG.randn(3, 7).astype(np.float32))
+    registry.remove("t1")
+    report = server.tick()
+    assert report.launches == 1 and report.requests == 2
+    np.testing.assert_array_equal(
+        server.result(t_live), registry.get("t0").predict(x0)
+    )
+    with pytest.raises(KeyError, match="removed"):
+        server.result(t_dead)
+
+
+def test_server_rejects_bad_requests(registry):
+    server = CircuitServer(registry)
+    with pytest.raises(KeyError):
+        server.submit("nope", np.zeros((1, 4), np.float32))
+    with pytest.raises(ValueError):
+        server.submit("t0", np.zeros((1, 99), np.float32))
+
+
+def test_server_stats_report(registry):
+    server = CircuitServer(registry)
+    for tenant in registry:
+        n_feats = registry.get(tenant).encoder.n_features
+        server.predict(tenant, RNG.randn(8, n_feats).astype(np.float32))
+    rep = server.stats.report()
+    assert rep["requests"] == len(TENANT_SHAPES)
+    assert rep["rows"] == 8 * len(TENANT_SHAPES)
+    assert rep["launches"] == len(TENANT_SHAPES)  # one predict() per tick
+    assert rep["p99_tick_ms"] >= rep["p50_tick_ms"] >= 0.0
+    assert 0.0 < rep["mean_occupancy"] <= 1.0
