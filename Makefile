@@ -1,7 +1,7 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test dev-deps bench-serve example-serve
+.PHONY: test lint dev-deps bench-serve example-serve example-quickstart smoke
 
 dev-deps:
 	$(PYTHON) -m pip install -r requirements-dev.txt
@@ -10,8 +10,16 @@ dev-deps:
 test:
 	$(PYTHON) -m pytest -x -q
 
+lint:
+	$(PYTHON) -m ruff check .
+
 bench-serve:
 	$(PYTHON) benchmarks/serve_circuits.py
 
 example-serve:
 	$(PYTHON) examples/serve_circuits.py
+
+example-quickstart:
+	$(PYTHON) examples/quickstart.py
+
+smoke: example-quickstart example-serve

@@ -8,11 +8,15 @@ criteria ask for is printed per config: every tick that had ≥ 2 pending
 tenants served them with exactly one kernel launch, and results stay
 bit-identical to the per-model `ServableCircuit.predict` path.
 
-    PYTHONPATH=src python benchmarks/serve_circuits.py [--ticks N]
-        [--tenants N] [--kernel]
+Each run is tagged with the resolved execution-backend name (from the
+`repro.runtime` registry) in its results JSON, so BENCH trajectories stay
+comparable across backends.
 
-On CPU the Pallas path runs in interpret mode (plumbing validation, not
-speed); pass --kernel to exercise it anyway.
+    PYTHONPATH=src python benchmarks/serve_circuits.py [--ticks N]
+        [--tenants N] [--backend ref] [--backend pallas]
+
+On CPU the ``pallas`` backend runs in interpret mode (plumbing validation,
+not speed).
 """
 from __future__ import annotations
 
@@ -23,6 +27,7 @@ import jax
 import numpy as np
 
 from benchmarks.common import save_json
+from repro import runtime
 from repro.core import encoding as E
 from repro.core import gates
 from repro.core.api import ServableCircuit
@@ -77,14 +82,14 @@ def drive(server: CircuitServer, registry: CircuitRegistry, *, ticks: int,
 
 
 def run(ticks: int = 50, n_tenants: int = 8, mean_rows: int = 24,
-        use_kernel: bool = False, seed: int = 0) -> dict:
+        backend: str = "ref", seed: int = 0) -> dict:
     rng = np.random.RandomState(seed)
     registry = make_fleet(n_tenants, rng)
-    server = CircuitServer(registry, use_kernel=use_kernel)
+    server = CircuitServer(registry, backend=backend)
 
     # warmup: trigger plan build + jit compile outside the timed window
     drive(server, registry, ticks=2, mean_rows=mean_rows, rng=rng)
-    server.stats = type(server.stats)()
+    server.reset_stats()
 
     t0 = time.perf_counter()
     mism = drive(server, registry, ticks=ticks, mean_rows=mean_rows,
@@ -93,7 +98,7 @@ def run(ticks: int = 50, n_tenants: int = 8, mean_rows: int = 24,
 
     rep = server.stats.report()
     rep.update({
-        "impl": "pallas-kernel" if use_kernel else "jnp-oracle",
+        "impl": server.backend.name,  # legacy key, kept for BENCH continuity
         "n_tenants": n_tenants,
         "wall_s": round(wall, 3),
         "parity_mismatches": mism,
@@ -106,19 +111,27 @@ def main():
     ap.add_argument("--ticks", type=int, default=50)
     ap.add_argument("--tenants", type=int, default=8)
     ap.add_argument("--mean-rows", type=int, default=24)
+    implemented = [
+        n for n in runtime.available_backends()
+        if runtime.get_backend(n).capabilities().implemented
+    ]
+    ap.add_argument("--backend", action="append", default=None,
+                    choices=implemented,
+                    help="execution backend(s) to bench (repeatable; "
+                         "default: ref)")
     ap.add_argument("--kernel", action="store_true",
-                    help="also run the Pallas spans kernel (interpret on CPU)")
+                    help="deprecated alias for --backend pallas")
     args = ap.parse_args()
 
+    backends = args.backend or ["ref"]
+    if args.kernel and "pallas" not in backends:
+        backends.append("pallas")
     results = []
-    configs = [dict(use_kernel=False)]
-    if args.kernel:
-        configs.append(dict(use_kernel=True))
-    for cfg in configs:
+    for backend in backends:
         rep = run(ticks=args.ticks, n_tenants=args.tenants,
-                  mean_rows=args.mean_rows, **cfg)
+                  mean_rows=args.mean_rows, backend=backend)
         results.append(rep)
-        print(f"--- {rep['impl']} ({rep['n_tenants']} tenants) ---")
+        print(f"--- backend={rep['backend']} ({rep['n_tenants']} tenants) ---")
         for k in ("qps", "rows_per_s", "p50_tick_ms", "p99_tick_ms",
                   "mean_occupancy", "max_tenants_per_launch", "launches",
                   "ticks", "parity_mismatches"):

@@ -1,17 +1,27 @@
-"""Multi-tenant circuit serving: fit several Tiny Classifiers, register
-them as tenants, and serve mixed traffic through one fused kernel launch
-per tick.
+"""Multi-tenant circuit serving: fit several Tiny Classifiers, persist
+them as on-disk artifacts, and boot a server **from the artifacts alone**
+— the fleet-restart flow.
 
 The flow mirrors a deployment: each dataset stands in for a customer
 scenario (its own feature width, encoding, and class count); the evolved
-circuit is exported with `to_servable()`, registered under the tenant's
-name, and the `CircuitServer` micro-batches every tenant's requests into a
-single `eval_population_spans` call.  At the end one tenant is hot-swapped
-to show generation-tagged recompilation.
+circuit is exported with `to_servable()` and saved as a versioned
+npz+JSON bundle (`CircuitRegistry.save_dir`).  Serving then starts from
+`CircuitRegistry.load_dir` — no fitted classifier objects, no `fit()`
+call — and the `CircuitServer` micro-batches every tenant's requests
+into a single `eval_population_spans` launch per tick through the
+configured execution backend.  At the end one tenant is hot-swapped to
+show generation-tagged recompilation.
 
-    PYTHONPATH=src python examples/serve_circuits.py
+    PYTHONPATH=src python examples/serve_circuits.py [--artifacts DIR]
+
+With ``--artifacts DIR`` pointing at a directory that already holds
+``*.circuit.npz`` bundles (a previous run), fitting is skipped entirely:
+the server boots straight from disk.
 """
+import argparse
+import os
 import sys
+import tempfile
 
 sys.path.insert(0, "src")
 
@@ -20,7 +30,7 @@ import numpy as np
 from repro.core.api import AutoTinyClassifier
 from repro.core.encoding import EncodingConfig
 from repro.data import load_dataset, train_test_split
-from repro.serve.circuits import CircuitRegistry, CircuitServer
+from repro.serve.circuits import BUNDLE_SUFFIX, CircuitRegistry, CircuitServer
 
 # tenant name → dataset (heterogeneous widths and class counts)
 TENANTS = ("blood", "iris", "led", "wall-robot")
@@ -37,44 +47,72 @@ def fit_tenant(dataset: str, seed: int = 0):
     clf.fit(train.x, train.y, ds.n_classes)
     print(f"  {dataset:11s}: {ds.n_features} feats, {ds.n_classes} classes, "
           f"test bal-acc {clf.balanced_score(test.x, test.y):.3f}")
-    return clf, test
+    return clf
+
+
+def build_artifacts(artifact_dir: str):
+    """Fit one classifier per tenant and persist the servable bundles."""
+    print("fitting one tiny classifier per tenant ...")
+    staging = CircuitRegistry()
+    for name in TENANTS:
+        staging.add(name, fit_tenant(name).to_servable())
+    written = staging.save_dir(artifact_dir)
+    print(f"  wrote {len(written)} artifact bundles to {artifact_dir}")
 
 
 def main():
-    print("fitting one tiny classifier per tenant ...")
-    fitted = {name: fit_tenant(name) for name in TENANTS}
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--artifacts", default=None,
+                    help="artifact directory; if it already holds "
+                         f"*{BUNDLE_SUFFIX} bundles, fitting is skipped")
+    args = ap.parse_args()
 
-    registry = CircuitRegistry()
-    for name, (clf, _) in fitted.items():
-        registry.add(name, clf.to_servable())
+    artifact_dir = args.artifacts or tempfile.mkdtemp(prefix="circuits-")
+    have = (os.path.isdir(artifact_dir)
+            and any(f.endswith(BUNDLE_SUFFIX) for f in os.listdir(artifact_dir)))
+    if have:
+        print(f"reusing artifact bundles in {artifact_dir} (no fitting)")
+    else:
+        build_artifacts(artifact_dir)
+
+    # --- fleet restart: everything below runs from disk, no fit() ------
+    registry = CircuitRegistry.load_dir(artifact_dir)
     server = CircuitServer(registry)
+    print(f"\nbooted server from {len(registry)} on-disk artifacts "
+          f"(backend={server.backend.name})")
 
-    print("\nserving mixed traffic (40 ticks, every tenant each tick) ...")
+    datasets = {name: load_dataset(name) for name in registry}
+    print("serving mixed traffic (40 ticks, every tenant each tick) ...")
     rng = np.random.RandomState(0)
     mismatches = 0
     for _ in range(40):
         tickets = {}
-        for name, (_, test) in fitted.items():
+        for name, ds in datasets.items():
             take = rng.randint(1, 48)
-            idx = rng.randint(0, test.x.shape[0], take)
-            tickets[name] = (server.submit(name, test.x[idx]), test.x[idx])
+            idx = rng.randint(0, ds.x.shape[0], take)
+            x = ds.x[idx].astype(np.float32)
+            tickets[name] = (server.submit(name, x), x)
         report = server.tick()
-        assert report.launches == 1 and report.tenants == len(TENANTS)
+        assert report.launches == 1 and report.tenants == len(registry)
         for name, (ticket, x) in tickets.items():
             got = server.result(ticket)
-            want = fitted[name][0].predict(x)
+            want = registry.get(name).predict(x)  # per-model reference path
             mismatches += int(not np.array_equal(got, want))
-    print(f"  {len(TENANTS)} tenants per fused launch, "
+    print(f"  {len(registry)} tenants per fused launch, "
           f"round-trip mismatches vs per-model predict: {mismatches}")
 
     for k, v in server.stats.report().items():
         print(f"  {k:23s} {v}")
 
+    if have:
+        return  # pure-restart run: nothing to hot-swap against
     print("\nhot-swapping tenant 'blood' (generation-tagged recompile) ...")
-    clf2, test2 = fit_tenant("blood", seed=1)
-    gen = registry.add("blood", clf2.to_servable(), replace=True)
-    got = server.predict("blood", test2.x[:10])
-    assert np.array_equal(got, clf2.predict(test2.x[:10]))
+    clf2 = fit_tenant("blood", seed=1)
+    sc2 = clf2.to_servable()
+    gen = registry.add("blood", sc2, replace=True)
+    x2 = datasets["blood"].x[:10].astype(np.float32)
+    got = server.predict("blood", x2)
+    assert np.array_equal(got, sc2.predict(x2))
     print(f"  registry generation {gen}; new circuit served correctly")
 
 

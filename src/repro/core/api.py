@@ -14,17 +14,33 @@ to_verilog / to_c / hardware_report: the ASIC/FPGA toolflow (§4).
 from __future__ import annotations
 
 import dataclasses
+import json
 from typing import Sequence
 
 import jax
+import jax.numpy as jnp
 import numpy as np
 
+from repro import runtime
 from repro.core import encoding as E
 from repro.core import fitness as F
 from repro.core import gates, hardware, netlist, verilog
 from repro.core.evolve import EvolveConfig, EvolveState, evolve_packed
 from repro.core.genome import CircuitSpec, Genome, opcodes
-from repro.kernels import ops as kernel_ops
+
+# On-disk ServableCircuit bundle format (see ServableCircuit.save):
+# a single .npz holding the genome/encoder arrays plus a JSON metadata
+# string.  Bump on any incompatible layout change; load() rejects
+# versions it does not know.
+SERVABLE_FORMAT_VERSION = 1
+SERVABLE_FORMAT_KIND = "tiny-classifier-circuits/servable-circuit"
+
+
+def read_servable_meta(path: str) -> dict:
+    """Read just the JSON metadata of a saved ServableCircuit bundle
+    (format version, circuit spec, encoder config, validating backend)."""
+    with np.load(path, allow_pickle=False) as z:
+        return json.loads(str(z["meta"]))
 
 
 @dataclasses.dataclass
@@ -84,20 +100,105 @@ class ServableCircuit:
     def n_outputs(self) -> int:
         return self.spec.n_outputs
 
-    def predict(self, x: np.ndarray, *, use_kernel: bool = False) -> np.ndarray:
+    def predict(
+        self, x: np.ndarray, *,
+        backend: "str | runtime.EvalBackend" = "ref",
+    ) -> np.ndarray:
         """Single-model reference path (the serving engine must match this
         bit-exactly)."""
+        be = runtime.resolve_backend(backend)
         bits = E.encode(self.encoder, np.asarray(x, np.float32))
         r = bits.shape[0]
         x_words = E.pack_bits_rows(bits, E.n_words(r))
-        out = kernel_ops.eval_circuit(
+        out = be.eval_circuit(
             opcodes(self.genome, self.spec),
             self.genome.edge_src,
             self.genome.out_src,
-            x_words,
-            use_kernel=use_kernel,
+            jnp.asarray(x_words),
         )
         return decode_predictions(out, r, self.n_classes)
+
+    # -- persistence ---------------------------------------------------
+    def save(
+        self, path: str, *,
+        validated_backend: "str | runtime.EvalBackend" = "ref",
+    ) -> str:
+        """Write the artifact as a versioned npz+JSON bundle.
+
+        The bundle carries everything `load` needs to serve raw float
+        features — genome arrays, circuit spec (incl. the opcode
+        function set), fitted encoder parameters, class count — plus a
+        format version and the name of the backend the artifact was
+        validated on.  Returns the path written (np.savez appends
+        ``.npz`` when missing)."""
+        be_name = runtime.resolve_backend(validated_backend).name
+        meta = {
+            "kind": SERVABLE_FORMAT_KIND,
+            "format_version": SERVABLE_FORMAT_VERSION,
+            "spec": {
+                "n_inputs": int(self.spec.n_inputs),
+                "n_nodes": int(self.spec.n_nodes),
+                "n_outputs": int(self.spec.n_outputs),
+                "fn_set": [int(op) for op in self.spec.fn_set],
+            },
+            "encoder": {
+                "strategy": self.encoder.strategy,
+                "bits": int(self.encoder.bits),
+            },
+            "n_classes": int(self.n_classes),
+            "validated_backend": be_name,
+        }
+        if not path.endswith(".npz"):
+            path = path + ".npz"
+        np.savez(
+            path,
+            meta=json.dumps(meta),
+            gate_fn=np.asarray(self.genome.gate_fn, np.int32),
+            edge_src=np.asarray(self.genome.edge_src, np.int32),
+            out_src=np.asarray(self.genome.out_src, np.int32),
+            enc_thresholds=np.asarray(self.encoder.thresholds, np.float32),
+            enc_codes=np.asarray(self.encoder.codes, np.uint8),
+        )
+        return path
+
+    @classmethod
+    def load(cls, path: str) -> "ServableCircuit":
+        """Load a bundle written by `save`; predictions are bit-identical
+        to the artifact that was saved."""
+        with np.load(path, allow_pickle=False) as z:
+            meta = json.loads(str(z["meta"]))
+            if meta.get("kind") != SERVABLE_FORMAT_KIND:
+                raise ValueError(
+                    f"{path}: not a ServableCircuit bundle "
+                    f"(kind={meta.get('kind')!r})"
+                )
+            version = meta.get("format_version")
+            if version != SERVABLE_FORMAT_VERSION:
+                raise ValueError(
+                    f"{path}: unsupported bundle format version {version!r} "
+                    f"(this build reads version {SERVABLE_FORMAT_VERSION})"
+                )
+            spec = CircuitSpec(
+                n_inputs=meta["spec"]["n_inputs"],
+                n_nodes=meta["spec"]["n_nodes"],
+                n_outputs=meta["spec"]["n_outputs"],
+                fn_set=tuple(meta["spec"]["fn_set"]),
+            )
+            genome = Genome(
+                gate_fn=jnp.asarray(z["gate_fn"], jnp.int32),
+                edge_src=jnp.asarray(z["edge_src"], jnp.int32),
+                out_src=jnp.asarray(z["out_src"], jnp.int32),
+            )
+            encoder = E.Encoder(
+                thresholds=np.asarray(z["enc_thresholds"], np.float32),
+                codes=np.asarray(z["enc_codes"], np.uint8),
+                strategy=meta["encoder"]["strategy"],
+                bits=meta["encoder"]["bits"],
+            )
+        return cls(
+            spec=spec, genome=genome, encoder=encoder,
+            n_classes=meta["n_classes"],
+        )
 
 
 class AutoTinyClassifier:
@@ -114,14 +215,29 @@ class AutoTinyClassifier:
         n_out_bits: int | None = None,
         val_fraction: float = 0.5,
         seed: int = 0,
-        use_kernel: bool = False,
+        backend: "str | runtime.EvalBackend" = "ref",
+        **deprecated,
     ):
+        # one-release shim: AutoTinyClassifier(use_kernel=True) still works,
+        # warns, and routes to the matching registered backend
+        if deprecated:
+            unknown = set(deprecated) - {"use_kernel", "interpret"}
+            if unknown:
+                raise TypeError(
+                    f"AutoTinyClassifier: unexpected arguments {sorted(unknown)}"
+                )
+        self.backend = runtime.resolve_with_deprecated_flags(
+            backend,
+            deprecated.get("use_kernel"),
+            deprecated.get("interpret"),
+            owner="AutoTinyClassifier",
+        )
         self.fn_set = gates.FUNCTION_SETS[fn_set] if isinstance(fn_set, str) else fn_set
         self.n_gates = n_gates
         self.encodings = tuple(encodings)
         self.cfg = EvolveConfig(
             lam=lam, p=p, gamma=gamma, kappa=kappa, max_gens=max_gens,
-            use_kernel=use_kernel,
+            backend=self.backend,
         )
         self.n_out_bits = n_out_bits
         self.val_fraction = val_fraction
@@ -183,7 +299,7 @@ class AutoTinyClassifier:
         )
 
     def predict(self, x: np.ndarray) -> np.ndarray:
-        return self.to_servable().predict(x)
+        return self.to_servable().predict(x, backend=self.backend)
 
     def balanced_score(self, x: np.ndarray, y: np.ndarray) -> float:
         pred = self.predict(x)

@@ -25,11 +25,11 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro import runtime
 from repro.core import fitness as F
 from repro.core.encoding import PackedDataset
 from repro.core.genome import CircuitSpec, Genome, init_genome, opcodes
 from repro.core.mutate import mutate_children
-from repro.kernels import ops as kernel_ops
 
 # Batched eval: stacked genomes (leading λ axis) → (train_fits, val_fits).
 BatchEvalFn = Callable[[Genome], tuple[jax.Array, jax.Array]]
@@ -42,7 +42,8 @@ class EvolveConfig:
     gamma: float = 0.01
     kappa: int = 300
     max_gens: int = 8000
-    use_kernel: bool = False  # route fitness eval through the Pallas kernel
+    # execution backend for fitness eval (name or repro.runtime.EvalBackend)
+    backend: "str | runtime.EvalBackend" = "ref"
 
     def rate(self, spec: CircuitSpec) -> float:
         return self.p if self.p is not None else 1.0 / spec.n_nodes
@@ -65,15 +66,16 @@ def make_eval_fn(
     data: PackedDataset,
     mask_train: jax.Array,
     mask_val: jax.Array,
-    use_kernel: bool = False,
+    backend: "str | runtime.EvalBackend" = "ref",
 ) -> BatchEvalFn:
     """Single forward pass over *all* packed rows; train and val fitness are
     two masked confusion reductions over the same circuit outputs."""
+    be = runtime.resolve_backend(backend)
 
     def eval_fn(genomes: Genome):
-        out = kernel_ops.eval_population(
+        out = be.eval_population(
             opcodes(genomes, spec), genomes.edge_src, genomes.out_src,
-            data.x_words, use_kernel=use_kernel,
+            data.x_words,
         )  # (λ, O, W)
         ft = jax.vmap(lambda o: F.balanced_accuracy(o, data, mask_train))(out)
         fv = jax.vmap(lambda o: F.balanced_accuracy(o, data, mask_val))(out)
@@ -183,5 +185,5 @@ def evolve_packed(
     mask_val: jax.Array,
 ) -> EvolveState:
     """Convenience: evolve directly on a PackedDataset."""
-    eval_fn = make_eval_fn(spec, data, mask_train, mask_val, cfg.use_kernel)
+    eval_fn = make_eval_fn(spec, data, mask_train, mask_val, cfg.backend)
     return evolve(key, spec, cfg, eval_fn)

@@ -30,6 +30,7 @@ from jax.sharding import Mesh, PartitionSpec as P
 
 from repro.utils.jax_compat import shard_map
 
+from repro import runtime
 from repro.core import fitness as F
 from repro.core.encoding import PackedDataset
 from repro.core.evolve import (
@@ -40,7 +41,6 @@ from repro.core.evolve import (
     not_terminated,
 )
 from repro.core.genome import CircuitSpec, Genome, opcodes
-from repro.kernels import ops as kernel_ops
 
 
 @dataclasses.dataclass(frozen=True)
@@ -56,15 +56,16 @@ def _make_psum_eval_fn(
     mask_train: jax.Array,
     mask_val: jax.Array,
     data_axes: tuple[str, ...],
-    use_kernel: bool = False,
+    backend: "str | runtime.EvalBackend" = "ref",
 ):
     """Batched eval over a *local word shard*; confusion counts are psum'ed
     over the data axes, making fitness exact under row sharding."""
+    be = runtime.resolve_backend(backend)
 
     def eval_fn(genomes: Genome):
-        out = kernel_ops.eval_population(
+        out = be.eval_population(
             opcodes(genomes, spec), genomes.edge_src, genomes.out_src,
-            data.x_words, use_kernel=use_kernel,
+            data.x_words,
         )
 
         def counts(o, m):
@@ -96,12 +97,14 @@ def evolve_islands(
     mask_train: jax.Array,
     mask_val: jax.Array,
     mesh: Mesh,
-    use_kernel: bool = False,
+    backend: "str | runtime.EvalBackend" = "ref",
 ):
     """Run island evolution on `mesh`. Returns per-island final EvolveStates
     stacked on a leading island axis (host then argmaxes best_val)."""
     n_islands = mesh.shape[icfg.island_axis]
     assert keys.shape[0] == n_islands, (keys.shape, n_islands)
+    # resolve once at the boundary; the shard_map'd body closes over it
+    be = runtime.resolve_backend(backend)
 
     w_axes = P(None, icfg.data_axes)   # (rows, W) arrays: shard word axis
     v_axes = P(icfg.data_axes)         # (W,) arrays
@@ -120,7 +123,7 @@ def evolve_islands(
     def run(keys, x_w, y_w, c_w, m_w, m_tr, m_va):
         local = PackedDataset(x_w, y_w, c_w, m_w)
         eval_fn = _make_psum_eval_fn(
-            spec, local, m_tr, m_va, icfg.data_axes, use_kernel
+            spec, local, m_tr, m_va, icfg.data_axes, be
         )
         state = init_state(keys[0], spec, eval_fn)
         t0 = jnp.zeros((), jnp.int32)

@@ -1,36 +1,19 @@
-"""Jit'd public wrappers around the circuit-evaluation kernel.
+"""Backend-dispatching wrappers around circuit evaluation (legacy surface).
 
-Dispatches between the Pallas TPU kernel (`circuit_eval.py`) and the pure-jnp
-oracle (`ref.py`).  On CPU (this container) the kernel runs in interpret mode;
-on TPU it compiles natively.  The wrapper pads the word axis to the kernel's
-lane-aligned block size and picks a block that keeps the VMEM node-value
-table within budget.
+Evaluation strategy now lives in the `repro.runtime` backend registry —
+``"ref"`` (pure-jnp oracle), ``"pallas"`` (TPU kernel, interpret on CPU),
+``"pallas-gpu"`` (reserved).  New code should resolve a backend once at
+its API boundary (`repro.runtime.resolve_backend`) and call its methods;
+these wrappers remain as the module-level convenience surface and as the
+**one-release deprecation shim** for the retired ``use_kernel`` /
+``interpret`` boolean pair (passing either emits `DeprecationWarning`
+and routes to the matching backend).
 """
 from __future__ import annotations
 
-import functools
-
 import jax
-import jax.numpy as jnp
-import numpy as np
 
-from repro.kernels import circuit_eval, ref
-
-VMEM_BUDGET_BYTES = 12 * 1024 * 1024  # leave headroom out of ~16 MB/core
-
-
-def _on_tpu() -> bool:
-    return jax.default_backend() == "tpu"
-
-
-def pick_block_words(n_signals: int, w: int, lane: int = circuit_eval.LANE) -> int:
-    """Largest lane-multiple block whose (I+n)-row uint32 table fits VMEM."""
-    max_words = max(VMEM_BUDGET_BYTES // (4 * max(n_signals, 1)), lane)
-    block = (max_words // lane) * lane
-    block = min(block, 4 * lane)  # cap: 512 words = 16k rows per cell
-    # no point exceeding the (padded) word count itself
-    w_padded = ((w + lane - 1) // lane) * lane
-    return min(block, w_padded)
+from repro import runtime
 
 
 def eval_population(
@@ -39,37 +22,15 @@ def eval_population(
     out_src: jax.Array,   # i32[P, O]
     x_words: jax.Array,   # u32[I, W]
     *,
-    use_kernel: bool = False,
-    interpret: bool | None = None,
+    backend: "str | runtime.EvalBackend" = "ref",
+    use_kernel: bool | None = None,    # deprecated → backend=
+    interpret: bool | None = None,     # deprecated → backend=
 ) -> jax.Array:           # u32[P, O, W]
     """Evaluate a population of circuits on a shared packed dataset."""
-    if not use_kernel:
-        return ref.eval_population_packed(opcodes, edge_src, out_src, x_words)
-
-    n_in, w = x_words.shape
-    n = opcodes.shape[1]
-    block = pick_block_words(n_in + n, w)
-    w_pad = ((w + block - 1) // block) * block
-    if w_pad != w:
-        x_words = jnp.pad(x_words, ((0, 0), (0, w_pad - w)))
-    out = circuit_eval.eval_population_kernel(
-        opcodes.astype(jnp.int32),
-        edge_src.astype(jnp.int32),
-        out_src.astype(jnp.int32),
-        x_words.astype(jnp.uint32),
-        block_words=block,
-        interpret=(not _on_tpu()) if interpret is None else interpret,
+    be = runtime.resolve_with_deprecated_flags(
+        backend, use_kernel, interpret, owner="eval_population"
     )
-    return out[..., :w]
-
-
-@functools.partial(jax.jit, static_argnames=("span_words",))
-def _spans_ref(opcodes, edge_src, out_src, x_words, word_off, in_width,
-               span_words):
-    return ref.eval_population_spans_packed(
-        opcodes, edge_src, out_src, x_words, word_off, in_width,
-        span_words=span_words,
-    )
+    return be.eval_population(opcodes, edge_src, out_src, x_words)
 
 
 def eval_population_spans(
@@ -81,8 +42,9 @@ def eval_population_spans(
     in_width: jax.Array,   # i32[P] live input rows of circuit p
     *,
     span_words: int,
-    use_kernel: bool = False,
-    interpret: bool | None = None,
+    backend: "str | runtime.EvalBackend" = "ref",
+    use_kernel: bool | None = None,    # deprecated → backend=
+    interpret: bool | None = None,     # deprecated → backend=
 ) -> jax.Array:            # u32[P, O, span_words]
     """Multi-tenant population eval: circuit p reads only its own span of
     ``span_words`` words, with per-circuit input-width masking.
@@ -94,47 +56,27 @@ def eval_population_spans(
     (the serving engine lays spans out back to back); the kernel path
     rejects misaligned concrete offsets rather than truncating them.
     """
-    if not use_kernel:
-        return _spans_ref(
-            opcodes, edge_src, out_src, x_words,
-            word_off.astype(jnp.int32), in_width.astype(jnp.int32),
-            span_words,
-        )
-
-    n_in, w = x_words.shape
-    n = opcodes.shape[1]
-    block = pick_block_words(n_in + n, span_words)
-    if span_words % block or w % block:
-        block = span_words  # fall back to one block per span
-    # block | span_words holds here, so offsets that honour the documented
-    # multiple-of-span contract are block-aligned; the kernel's integer
-    # division would silently evaluate the wrong span otherwise.
-    if not isinstance(word_off, jax.core.Tracer):
-        off = np.asarray(word_off)
-        if off.size and (off % block).any():
-            raise ValueError(
-                f"word_off entries must be multiples of span_words"
-                f"={span_words} (kernel block {block}); got {off.tolist()}"
-            )
-    return circuit_eval.eval_population_spans_kernel(
-        opcodes.astype(jnp.int32),
-        edge_src.astype(jnp.int32),
-        out_src.astype(jnp.int32),
-        x_words.astype(jnp.uint32),
-        word_off.astype(jnp.int32),
-        in_width.astype(jnp.int32),
+    be = runtime.resolve_with_deprecated_flags(
+        backend, use_kernel, interpret, owner="eval_population_spans"
+    )
+    return be.eval_population_spans(
+        opcodes, edge_src, out_src, x_words, word_off, in_width,
         span_words=span_words,
-        block_words=block,
-        interpret=(not _on_tpu()) if interpret is None else interpret,
     )
 
 
 def eval_circuit(
-    opcodes, edge_src, out_src, x_words, *, use_kernel: bool = False, interpret=None
+    opcodes,
+    edge_src,
+    out_src,
+    x_words,
+    *,
+    backend: "str | runtime.EvalBackend" = "ref",
+    use_kernel: bool | None = None,    # deprecated → backend=
+    interpret: bool | None = None,     # deprecated → backend=
 ) -> jax.Array:
     """Single-circuit convenience wrapper → u32[O, W]."""
-    out = eval_population(
-        opcodes[None], edge_src[None], out_src[None], x_words,
-        use_kernel=use_kernel, interpret=interpret,
+    be = runtime.resolve_with_deprecated_flags(
+        backend, use_kernel, interpret, owner="eval_circuit"
     )
-    return out[0]
+    return be.eval_circuit(opcodes, edge_src, out_src, x_words)

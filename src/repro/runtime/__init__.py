@@ -1,0 +1,54 @@
+"""Pluggable execution backends for circuit evaluation.
+
+One seam for every layer of the toolflow (encode → evolve → evaluate →
+deploy): an `EvalBackend` owns the three eval entry points
+(`eval_circuit`, `eval_population`, `eval_population_spans`), its own
+block/VMEM policy, and a `capabilities()` descriptor.  Callers pass
+``backend: str | EvalBackend`` and resolve it once at the API boundary —
+no more `use_kernel`/`interpret` boolean pairs threaded through the
+evolution loop, the classifier facade, and the serving engine.
+
+Registered backends:
+
+  * ``"ref"``    — pure-jnp oracle (`kernels/ref.py`), runs anywhere;
+  * ``"pallas"`` — the Pallas TPU kernels (`kernels/circuit_eval.py`),
+    interpret-mode on CPU / native on TPU, auto-detected;
+  * ``"pallas-gpu"`` — reserved ROADMAP slot; registered but raises
+    `BackendCapabilityError` until the GPU lowering lands.
+
+Third parties can `register_backend("name", factory)` to add paths
+(e.g. a Triton lowering) without touching core/serve code.
+"""
+from repro.runtime.base import (  # noqa: F401
+    BackendCapabilities,
+    BackendCapabilityError,
+    EvalBackend,
+)
+from repro.runtime.backends import (  # noqa: F401
+    PallasBackend,
+    PallasGpuBackend,
+    RefBackend,
+)
+from repro.runtime.registry import (  # noqa: F401
+    UnknownBackendError,
+    available_backends,
+    get_backend,
+    register_backend,
+    resolve_backend,
+)
+from repro.runtime.compat import resolve_with_deprecated_flags  # noqa: F401
+
+__all__ = [
+    "BackendCapabilities",
+    "BackendCapabilityError",
+    "EvalBackend",
+    "PallasBackend",
+    "PallasGpuBackend",
+    "RefBackend",
+    "UnknownBackendError",
+    "available_backends",
+    "get_backend",
+    "register_backend",
+    "resolve_backend",
+    "resolve_with_deprecated_flags",
+]

@@ -1,0 +1,104 @@
+"""EvalBackend abstraction: the execution seam of the toolflow.
+
+A backend owns *how* a population of sea-of-gates circuits is evaluated
+on bit-packed data — which kernel, which block/VMEM policy, which device
+kinds — behind three entry points whose contracts are fixed:
+
+  * ``eval_population(opcodes, edge_src, out_src, x_words)``
+      i32[P, n], i32[P, n, 2], i32[P, O], u32[I, W] → u32[P, O, W]
+  * ``eval_population_spans(..., word_off, in_width, *, span_words)``
+      multi-tenant serving path: circuit p reads only words
+      [word_off[p], word_off[p]+span_words) with input rows ≥ in_width[p]
+      masked to zero → u32[P, O, span_words]
+  * ``eval_circuit(...)`` single-circuit convenience → u32[O, W]
+
+All backends must be bit-identical on these contracts (the parity test
+matrix in tests/ enforces it); they may differ only in performance and
+in which devices they can run on, which `capabilities()` describes.
+"""
+from __future__ import annotations
+
+import abc
+import dataclasses
+
+import jax
+
+
+class BackendCapabilityError(NotImplementedError):
+    """Raised when a registered backend cannot serve a request on this
+    host/device (e.g. the reserved ``pallas-gpu`` slot before its lowering
+    lands, or a spans call on a backend without span support)."""
+
+
+@dataclasses.dataclass(frozen=True)
+class BackendCapabilities:
+    """Static descriptor of what an execution backend can do.
+
+    ``word_alignment`` is the word-axis granularity the backend pads or
+    blocks to internally (1 = none).  ``span_offset_contract`` documents
+    the alignment constraint on ``word_off`` entries for the spans entry
+    point.  ``implemented`` is False for reserved registry slots whose
+    eval entry points raise `BackendCapabilityError`.
+    """
+
+    name: str
+    device_kinds: tuple[str, ...]   # e.g. ("cpu", "tpu")
+    supports_spans: bool
+    word_alignment: int
+    span_offset_contract: str = "none"
+    implemented: bool = True
+
+
+class EvalBackend(abc.ABC):
+    """One execution strategy for circuit evaluation.
+
+    Implementations are stateless w.r.t. the data they evaluate (safe to
+    share across threads / jit traces); configuration such as a forced
+    interpret mode lives in the instance.
+    """
+
+    name: str = "abstract"
+
+    @abc.abstractmethod
+    def capabilities(self) -> BackendCapabilities:
+        """Static descriptor: spans support, alignment, device kinds."""
+
+    @abc.abstractmethod
+    def eval_population(
+        self,
+        opcodes: jax.Array,   # i32[P, n]
+        edge_src: jax.Array,  # i32[P, n, 2]
+        out_src: jax.Array,   # i32[P, O]
+        x_words: jax.Array,   # u32[I, W]
+    ) -> jax.Array:           # u32[P, O, W]
+        """Evaluate a population of circuits on a shared packed dataset."""
+
+    @abc.abstractmethod
+    def eval_population_spans(
+        self,
+        opcodes: jax.Array,    # i32[P, n]
+        edge_src: jax.Array,   # i32[P, n, 2]
+        out_src: jax.Array,    # i32[P, O]
+        x_words: jax.Array,    # u32[I_max, W_total] fused multi-tenant buffer
+        word_off: jax.Array,   # i32[P] word offset of circuit p's span
+        in_width: jax.Array,   # i32[P] live input rows of circuit p
+        *,
+        span_words: int,
+    ) -> jax.Array:            # u32[P, O, span_words]
+        """Multi-tenant population eval over per-circuit word spans."""
+
+    def eval_circuit(
+        self,
+        opcodes: jax.Array,   # i32[n]
+        edge_src: jax.Array,  # i32[n, 2]
+        out_src: jax.Array,   # i32[O]
+        x_words: jax.Array,   # u32[I, W]
+    ) -> jax.Array:           # u32[O, W]
+        """Single-circuit convenience wrapper (default: population of 1)."""
+        out = self.eval_population(
+            opcodes[None], edge_src[None], out_src[None], x_words
+        )
+        return out[0]
+
+    def __repr__(self) -> str:
+        return f"<{type(self).__name__} {self.name!r}>"

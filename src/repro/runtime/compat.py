@@ -1,0 +1,45 @@
+"""One-release deprecation shim for the retired `use_kernel`/`interpret`
+boolean pair.
+
+Old call sites (``eval_population(..., use_kernel=True, interpret=None)``,
+``AutoTinyClassifier(use_kernel=True)``) keep working for one release:
+the flags map onto the backend registry (``use_kernel=True`` → the
+``pallas`` backend, honouring a forced ``interpret``; ``use_kernel=False``
+→ ``ref``) and emit a `DeprecationWarning` pointing at ``backend=``.
+"""
+from __future__ import annotations
+
+import warnings
+
+from repro.runtime.backends import PallasBackend
+from repro.runtime.base import EvalBackend
+from repro.runtime.registry import get_backend, resolve_backend
+
+
+def resolve_with_deprecated_flags(
+    backend: "str | EvalBackend",
+    use_kernel: bool | None = None,
+    interpret: bool | None = None,
+    *,
+    owner: str,
+    stacklevel: int = 3,
+) -> EvalBackend:
+    """Resolve ``backend``, honouring legacy ``use_kernel``/``interpret``.
+
+    When either legacy flag is passed (not None) it wins over ``backend``
+    — that is what an un-migrated call site means — and a
+    `DeprecationWarning` names the owner API and the replacement."""
+    if use_kernel is None and interpret is None:
+        return resolve_backend(backend)
+    warnings.warn(
+        f"{owner}: use_kernel=/interpret= are deprecated and will be "
+        f"removed next release; pass backend='ref' | 'pallas' | an "
+        f"EvalBackend instance instead",
+        DeprecationWarning,
+        stacklevel=stacklevel,
+    )
+    if not use_kernel:
+        return get_backend("ref")
+    if interpret is None:
+        return get_backend("pallas")
+    return PallasBackend(interpret=interpret)

@@ -1,0 +1,80 @@
+"""String-keyed backend registry with lazy singleton instantiation.
+
+``resolve_backend`` is the one call every API boundary makes: it turns a
+``str | EvalBackend`` into an `EvalBackend` instance exactly once, so the
+rest of the call chain passes resolved objects, never names or flags.
+"""
+from __future__ import annotations
+
+import threading
+from typing import Callable
+
+from repro.runtime.backends import PallasBackend, PallasGpuBackend, RefBackend
+from repro.runtime.base import EvalBackend
+
+
+class UnknownBackendError(KeyError):
+    """Backend name not present in the registry (lists what is)."""
+
+
+_lock = threading.Lock()
+_factories: dict[str, Callable[[], EvalBackend]] = {}
+_instances: dict[str, EvalBackend] = {}
+
+
+def register_backend(
+    name: str, factory: Callable[[], EvalBackend], *, replace: bool = False
+) -> None:
+    """Register an execution backend under ``name``.
+
+    ``factory`` is called at most once, on first `get_backend(name)`; the
+    instance is cached.  Third-party backends register here and become
+    addressable from every API that takes ``backend=``."""
+    with _lock:
+        if name in _factories and not replace:
+            raise ValueError(f"backend {name!r} already registered")
+        _factories[name] = factory
+        _instances.pop(name, None)
+
+
+def available_backends() -> tuple[str, ...]:
+    """Registered backend names (registration order)."""
+    with _lock:
+        return tuple(_factories)
+
+
+def get_backend(name: str) -> EvalBackend:
+    """Resolve a backend name to its cached instance."""
+    with _lock:
+        if name in _instances:
+            return _instances[name]
+        try:
+            factory = _factories[name]
+        except KeyError:
+            raise UnknownBackendError(
+                f"unknown execution backend {name!r}; "
+                f"registered: {list(_factories)}"
+            ) from None
+    # run the factory outside the non-reentrant lock: a wrapper backend's
+    # factory may itself call get_backend (e.g. decorating the oracle)
+    inst = factory()
+    with _lock:
+        return _instances.setdefault(name, inst)
+
+
+def resolve_backend(backend: "str | EvalBackend") -> EvalBackend:
+    """str | EvalBackend → EvalBackend (the once-at-the-boundary call)."""
+    if isinstance(backend, EvalBackend):
+        return backend
+    if isinstance(backend, str):
+        return get_backend(backend)
+    raise TypeError(
+        f"backend must be a registered name or an EvalBackend instance, "
+        f"got {type(backend).__name__}"
+    )
+
+
+# -- built-ins --------------------------------------------------------------
+register_backend("ref", RefBackend)
+register_backend("pallas", PallasBackend)
+register_backend("pallas-gpu", PallasGpuBackend)

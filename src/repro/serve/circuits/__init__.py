@@ -6,10 +6,15 @@ tick.  See `registry` (genome padding / hot add-remove), `server` (the
 micro-batching engine) and `metrics` (QPS / latency / occupancy reports).
 """
 from repro.serve.circuits.metrics import ServerStats, TickReport
-from repro.serve.circuits.registry import CircuitRegistry, PopulationPlan
+from repro.serve.circuits.registry import (
+    BUNDLE_SUFFIX,
+    CircuitRegistry,
+    PopulationPlan,
+)
 from repro.serve.circuits.server import CircuitServer
 
 __all__ = [
+    "BUNDLE_SUFFIX",
     "CircuitRegistry",
     "CircuitServer",
     "PopulationPlan",

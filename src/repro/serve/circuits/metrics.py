@@ -34,8 +34,13 @@ class TickReport:
 
 @dataclasses.dataclass
 class ServerStats:
-    """Running aggregate over ticks (host-side, cheap)."""
+    """Running aggregate over ticks (host-side, cheap).
 
+    ``backend`` is the resolved execution-backend name the server
+    dispatches through — reported so trajectories (BENCH JSON, dashboards)
+    stay comparable across backends."""
+
+    backend: str = "ref"
     started_at: float = dataclasses.field(default_factory=time.perf_counter)
     ticks: int = 0
     empty_ticks: int = 0
@@ -67,6 +72,7 @@ class ServerStats:
         lat = np.asarray(self.tick_latencies_s or [0.0])
         occ = np.asarray(self.occupancies or [0.0])
         return {
+            "backend": self.backend,
             "ticks": self.ticks,
             "empty_ticks": self.empty_ticks,
             "launches": self.launches,

@@ -22,6 +22,7 @@ and any jit cache keyed on their shapes — must be refreshed.
 """
 from __future__ import annotations
 
+import os
 import threading
 from typing import Iterator, NamedTuple
 
@@ -31,6 +32,9 @@ from repro.core import gates
 from repro.core.api import ServableCircuit
 from repro.core.genome import opcodes as genome_opcodes
 from repro.core.genome import validate_genome
+
+# filename suffix for per-tenant artifact bundles in a registry directory
+BUNDLE_SUFFIX = ".circuit.npz"
 
 
 class PopulationPlan(NamedTuple):
@@ -110,6 +114,55 @@ class CircuitRegistry:
             del self._entries[tenant]
             self._generation += 1
             return self._generation
+
+    # -- persistence ---------------------------------------------------
+    def save_dir(
+        self, path: str, *, validated_backend: str = "ref"
+    ) -> list[str]:
+        """Write every tenant's artifact bundle into ``path`` (one
+        ``<tenant>.circuit.npz`` per tenant).  Returns the paths written.
+
+        The directory becomes a *snapshot* of the registry: bundles for
+        tenants no longer registered are deleted, so a later `load_dir`
+        cannot resurrect circuits the operator removed.  Together with
+        `load_dir` this is the fleet-restart story: a serving host
+        persists its registry, restarts, and re-serves the exact same
+        circuits without refitting anything."""
+        os.makedirs(path, exist_ok=True)
+        with self._lock:
+            entries = dict(self._entries)
+        # validate every name before writing anything — no partial fleets
+        for tenant in entries:
+            if os.sep in tenant or tenant.startswith("."):
+                raise ValueError(
+                    f"tenant name {tenant!r} is not filesystem-safe"
+                )
+        written = [
+            circuit.save(
+                os.path.join(path, tenant + BUNDLE_SUFFIX),
+                validated_backend=validated_backend,
+            )
+            for tenant, circuit in entries.items()
+        ]
+        for fname in os.listdir(path):
+            if (fname.endswith(BUNDLE_SUFFIX)
+                    and fname[: -len(BUNDLE_SUFFIX)] not in entries):
+                os.remove(os.path.join(path, fname))
+        return written
+
+    @classmethod
+    def load_dir(cls, path: str) -> "CircuitRegistry":
+        """Rebuild a registry from a directory of artifact bundles written
+        by `save_dir` — tenant names come from the filenames.  Loaded
+        circuits predict bit-identically to the ones that were saved."""
+        reg = cls()
+        names = sorted(
+            f for f in os.listdir(path) if f.endswith(BUNDLE_SUFFIX)
+        )
+        for fname in names:
+            tenant = fname[: -len(BUNDLE_SUFFIX)]
+            reg.add(tenant, ServableCircuit.load(os.path.join(path, fname)))
+        return reg
 
     # -- queries -------------------------------------------------------
     def __contains__(self, tenant: str) -> bool:

@@ -26,9 +26,9 @@ import time
 import jax.numpy as jnp
 import numpy as np
 
+from repro import runtime
 from repro.core import encoding as E
 from repro.core.api import decode_predictions
-from repro.kernels import ops as kernel_ops
 from repro.serve.circuits.metrics import ServerStats, TickReport
 from repro.serve.circuits.registry import CircuitRegistry, PopulationPlan
 
@@ -44,24 +44,25 @@ class CircuitServer:
 
     ``submit()`` enqueues rows and returns a ticket; ``tick()`` serves every
     pending row in one fused launch; ``result()`` collects predictions.
-    ``predict()`` is the one-shot convenience wrapper.  ``span_align`` pads
-    each tenant's word span to a multiple (set 128 on real TPUs so spans
-    stay lane-aligned; the default 1 keeps CPU/interpret ticks tight).
+    ``backend`` names the execution backend from the `repro.runtime`
+    registry (or is an `EvalBackend` instance); it is resolved once here
+    and every tick dispatches through it.  ``span_align`` pads each
+    tenant's word span to a multiple (set 128 on real TPUs so spans stay
+    lane-aligned — see ``backend.capabilities().word_alignment``; the
+    default 1 keeps CPU/interpret ticks tight).
     """
 
     def __init__(
         self,
         registry: CircuitRegistry,
         *,
-        use_kernel: bool = False,
-        interpret: bool | None = None,
+        backend: "str | runtime.EvalBackend" = "ref",
         span_align: int = 1,
     ):
         self.registry = registry
-        self.use_kernel = use_kernel
-        self.interpret = interpret
+        self.backend = runtime.resolve_backend(backend)
         self.span_align = max(int(span_align), 1)
-        self.stats = ServerStats()
+        self.stats = ServerStats(backend=self.backend.name)
         self._lock = threading.Lock()
         self._pending: dict[str, list[_Pending]] = {}
         self._results: dict[int, np.ndarray] = {}
@@ -69,6 +70,10 @@ class CircuitServer:
         # generation-tagged device copy of the stacked plan tensors
         self._plan: PopulationPlan | None = None
         self._dev: tuple | None = None
+
+    def reset_stats(self) -> None:
+        """Fresh stats window (keeps the resolved backend tag)."""
+        self.stats = ServerStats(backend=self.backend.name)
 
     # -- request interface ---------------------------------------------
     def submit(self, tenant: str, x: np.ndarray) -> int:
@@ -190,14 +195,12 @@ class CircuitServer:
 
         slots = np.asarray([w[0] for w in work])
         opc, edge, outs, in_w = dev
-        out = kernel_ops.eval_population_spans(
+        out = self.backend.eval_population_spans(
             opc[slots], edge[slots], outs[slots],
             jnp.asarray(x_buf),
             jnp.arange(k_active, dtype=jnp.int32) * span,
             in_w[slots],
             span_words=span,
-            use_kernel=self.use_kernel,
-            interpret=self.interpret,
         )
         out = np.asarray(out)  # u32[K, O_max, span]
 

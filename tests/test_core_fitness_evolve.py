@@ -84,11 +84,11 @@ def test_parent_fitness_monotone():
 
 
 def test_kernel_path_equals_ref_path_in_evolution():
-    """EvolveConfig(use_kernel=True) reaches identical results (same seed)."""
+    """EvolveConfig(backend="pallas") reaches identical results (same seed)."""
     data, mtr, mva, n_in = _learnable_problem(rows=400)
     spec = CircuitSpec(n_in, 25, 1, gates.FULL_FS)
-    cfg_r = EvolveConfig(lam=2, kappa=50, max_gens=120, use_kernel=False)
-    cfg_k = EvolveConfig(lam=2, kappa=50, max_gens=120, use_kernel=True)
+    cfg_r = EvolveConfig(lam=2, kappa=50, max_gens=120, backend="ref")
+    cfg_k = EvolveConfig(lam=2, kappa=50, max_gens=120, backend="pallas")
     f_r = evolve_packed(jax.random.key(5), spec, cfg_r, data, mtr, mva)
     f_k = evolve_packed(jax.random.key(5), spec, cfg_k, data, mtr, mva)
     assert float(f_r.best_val) == pytest.approx(float(f_k.best_val))

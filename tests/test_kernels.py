@@ -1,5 +1,7 @@
-"""Pallas circuit-eval kernel vs pure-jnp oracle: shape/fn-set/population
-sweeps (deliverable c: per-kernel allclose against ref.py)."""
+"""Execution-backend parity: every registered implemented backend must be
+bit-identical to the pure-jnp oracle over shape/fn-set/population sweeps
+(deliverable c: per-kernel equality against ref.py, now parameterized over
+the `repro.runtime` registry)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -8,7 +10,16 @@ import pytest
 from repro.core import gates
 from repro.core import encoding as E
 from repro.core.genome import CircuitSpec, init_genome, opcodes
-from repro.kernels import ops, ref
+from repro.kernels import ref
+from repro.runtime import PallasBackend, available_backends, get_backend
+
+# every implemented non-oracle backend is held to bit-parity with "ref" —
+# a new registration (e.g. the future pallas-gpu lowering) joins the sweep
+# automatically
+PARITY_BACKENDS = [
+    n for n in available_backends()
+    if n != "ref" and get_backend(n).capabilities().implemented
+]
 
 
 def _random_problem(seed, n_inputs, n_nodes, n_outputs, fn_set, rows, pop):
@@ -30,20 +41,24 @@ SWEEP = [
     (16, 100, 2, gates.FULL_FS, 1000, 5),
     (32, 300, 4, gates.EXTENDED_FS, 4096, 3),
     (100, 300, 2, gates.FULL_FS, 10_000, 2),
-    (6, 17, 3, gates.FULL_FS, 31, 7),  # odd everything
+    (6, 17, 3, gates.FULL_FS, 31, 7),  # odd everything (non-multiple-of-32)
 ]
 
 
+@pytest.mark.parametrize("backend", PARITY_BACKENDS)
 @pytest.mark.parametrize("ninp,nnod,nout,fs,rows,pop", SWEEP)
-def test_kernel_matches_ref(ninp, nnod, nout, fs, rows, pop):
+def test_backend_matches_ref(ninp, nnod, nout, fs, rows, pop, backend):
     spec, gs, xw, _ = _random_problem(7, ninp, nnod, nout, fs, rows, pop)
     ops_arr = opcodes(gs, spec)
-    out_ref = ref.eval_population_packed(ops_arr, gs.edge_src, gs.out_src, xw)
-    out_ker = ops.eval_population(
-        ops_arr, gs.edge_src, gs.out_src, xw, use_kernel=True
+    out_ref = get_backend("ref").eval_population(
+        ops_arr, gs.edge_src, gs.out_src, xw
     )
-    assert out_ker.shape == out_ref.shape
-    np.testing.assert_array_equal(np.asarray(out_ker), np.asarray(out_ref))
+    out_be = get_backend(backend).eval_population(
+        ops_arr, gs.edge_src, gs.out_src, xw
+    )
+    assert out_be.shape == out_ref.shape
+    assert out_be.dtype == out_ref.dtype == jnp.uint32
+    np.testing.assert_array_equal(np.asarray(out_be), np.asarray(out_ref))
 
 
 def test_packed_matches_rowwise():
@@ -60,8 +75,9 @@ def test_packed_matches_rowwise():
     np.testing.assert_array_equal(unpacked, np.asarray(out_r))
 
 
-def test_kernel_block_picker():
-    assert ops.pick_block_words(600, 10_000) % circuit_lane() == 0
+def test_pallas_block_picker():
+    """Block policy lives on the Pallas backend now, still lane-aligned."""
+    assert PallasBackend().pick_block_words(600, 10_000) % circuit_lane() == 0
 
 
 def circuit_lane():

@@ -1,0 +1,186 @@
+"""Execution-backend registry: resolution, capabilities, the reserved GPU
+slot, the use_kernel/interpret deprecation shim, and the backend parity
+matrix over population / spans / odd row counts."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro import runtime
+from repro.core import encoding as E
+from repro.core import gates
+from repro.core.api import AutoTinyClassifier
+from repro.core.genome import CircuitSpec, init_genome, opcodes
+from repro.kernels import ops
+
+
+def _problem(seed=0, n_inputs=10, n_nodes=30, n_outputs=2, rows=70, pop=4):
+    rng = np.random.RandomState(seed)
+    bits = rng.randint(0, 2, (rows, n_inputs)).astype(np.uint8)
+    xw = jnp.asarray(E.pack_bits_rows(bits, E.n_words(rows)))
+    spec = CircuitSpec(n_inputs, n_nodes, n_outputs, gates.FULL_FS)
+    gs = jax.vmap(lambda k: init_genome(k, spec))(
+        jax.random.split(jax.random.key(seed), pop)
+    )
+    return opcodes(gs, spec), gs.edge_src, gs.out_src, xw
+
+
+# ---------------------------------------------------------------------------
+# Registry
+# ---------------------------------------------------------------------------
+
+def test_builtin_backends_registered():
+    names = runtime.available_backends()
+    assert {"ref", "pallas", "pallas-gpu"} <= set(names)
+
+
+def test_get_backend_is_cached_singleton():
+    assert runtime.get_backend("ref") is runtime.get_backend("ref")
+
+
+def test_unknown_backend_lists_available():
+    with pytest.raises(runtime.UnknownBackendError, match="ref"):
+        runtime.get_backend("triton-maybe-someday")
+
+
+def test_resolve_backend_passthrough_and_typeerror():
+    be = runtime.PallasBackend(interpret=True)
+    assert runtime.resolve_backend(be) is be
+    assert runtime.resolve_backend("ref") is runtime.get_backend("ref")
+    with pytest.raises(TypeError):
+        runtime.resolve_backend(True)  # old boolean habits must not resolve
+
+
+def test_register_backend_no_silent_replace():
+    with pytest.raises(ValueError):
+        runtime.register_backend("ref", runtime.RefBackend)
+
+
+def test_capabilities_descriptors():
+    ref_caps = runtime.get_backend("ref").capabilities()
+    assert ref_caps.supports_spans and ref_caps.word_alignment == 1
+    pal_caps = runtime.get_backend("pallas").capabilities()
+    assert pal_caps.supports_spans and "tpu" in pal_caps.device_kinds
+    assert pal_caps.word_alignment > 1
+    gpu_caps = runtime.get_backend("pallas-gpu").capabilities()
+    assert not gpu_caps.implemented and gpu_caps.device_kinds == ("gpu",)
+
+
+def test_gpu_stub_raises_capability_error():
+    opc, es, osrc, xw = _problem()
+    gpu = runtime.get_backend("pallas-gpu")
+    with pytest.raises(runtime.BackendCapabilityError, match="ROADMAP"):
+        gpu.eval_population(opc, es, osrc, xw)
+    with pytest.raises(runtime.BackendCapabilityError):
+        gpu.eval_population_spans(
+            opc, es, osrc, xw,
+            jnp.zeros(opc.shape[0], jnp.int32),
+            jnp.full(opc.shape[0], xw.shape[0], jnp.int32),
+            span_words=xw.shape[1],
+        )
+
+
+# ---------------------------------------------------------------------------
+# Parity matrix: ref vs pallas(interpret) must be bit-identical u32
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("rows", [31, 32, 40, 65, 333])  # straddle 32-row words
+def test_population_parity_odd_rows(rows):
+    opc, es, osrc, xw = _problem(seed=rows, rows=rows)
+    a = runtime.get_backend("ref").eval_population(opc, es, osrc, xw)
+    b = runtime.get_backend("pallas").eval_population(opc, es, osrc, xw)
+    assert a.dtype == b.dtype == jnp.uint32
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+@pytest.mark.parametrize("span", [1, 2, 4])
+def test_spans_parity(span):
+    pop = 5
+    rng = np.random.RandomState(span)
+    spec = CircuitSpec(9, 20, 2, gates.EXTENDED_FS)
+    gs = jax.vmap(lambda k: init_genome(k, spec))(
+        jax.random.split(jax.random.key(span), pop)
+    )
+    xw = jnp.asarray(
+        rng.randint(0, 2**32, (9, pop * span), dtype=np.uint64)
+        .astype(np.uint32)
+    )
+    woff = jnp.arange(pop, dtype=jnp.int32) * span
+    iw = jnp.asarray(rng.randint(1, 10, pop).astype(np.int32))
+    args = (opcodes(gs, spec), gs.edge_src, gs.out_src, xw, woff, iw)
+    a = runtime.get_backend("ref").eval_population_spans(
+        *args, span_words=span
+    )
+    b = runtime.get_backend("pallas").eval_population_spans(
+        *args, span_words=span
+    )
+    assert a.dtype == b.dtype == jnp.uint32
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_eval_circuit_parity():
+    opc, es, osrc, xw = _problem(pop=1)
+    a = runtime.get_backend("ref").eval_circuit(opc[0], es[0], osrc[0], xw)
+    b = runtime.get_backend("pallas").eval_circuit(opc[0], es[0], osrc[0], xw)
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+# ---------------------------------------------------------------------------
+# Deprecation shim
+# ---------------------------------------------------------------------------
+
+def test_eval_population_use_kernel_warns_and_routes_to_pallas():
+    opc, es, osrc, xw = _problem()
+    with pytest.warns(DeprecationWarning, match="backend="):
+        out = ops.eval_population(opc, es, osrc, xw, use_kernel=True)
+    want = runtime.get_backend("pallas").eval_population(opc, es, osrc, xw)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+def test_eval_population_use_kernel_false_warns_and_routes_to_ref():
+    opc, es, osrc, xw = _problem()
+    with pytest.warns(DeprecationWarning):
+        out = ops.eval_population(opc, es, osrc, xw, use_kernel=False)
+    want = runtime.get_backend("ref").eval_population(opc, es, osrc, xw)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+def test_eval_population_spans_shim_warns():
+    opc, es, osrc, _ = _problem(pop=3)
+    xw = jnp.zeros((10, 6), jnp.uint32)
+    woff = jnp.arange(3, dtype=jnp.int32) * 2
+    iw = jnp.full(3, 10, jnp.int32)
+    with pytest.warns(DeprecationWarning):
+        out = ops.eval_population_spans(
+            opc, es, osrc, xw, woff, iw, span_words=2, use_kernel=True
+        )
+    assert out.shape == (3, osrc.shape[1], 2)
+
+
+def test_eval_population_default_is_ref_and_silent():
+    import warnings
+
+    opc, es, osrc, xw = _problem()
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")  # any warning fails the test
+        out = ops.eval_population(opc, es, osrc, xw)
+    want = runtime.get_backend("ref").eval_population(opc, es, osrc, xw)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
+
+
+def test_autotinyclassifier_use_kernel_warns_and_routes():
+    with pytest.warns(DeprecationWarning, match="AutoTinyClassifier"):
+        clf = AutoTinyClassifier(use_kernel=True)
+    assert clf.backend.name == "pallas"
+    assert clf.cfg.backend is clf.backend
+
+
+def test_autotinyclassifier_backend_param_resolves_silently():
+    import warnings
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("error")
+        clf = AutoTinyClassifier(backend="ref")
+    assert clf.backend.name == "ref"
+    with pytest.raises(TypeError):
+        AutoTinyClassifier(use_kerlen=True)  # typo'd kwargs still rejected

@@ -1,0 +1,175 @@
+"""Versioned ServableCircuit bundles + registry directory persistence:
+save→load→predict must be bit-identical, bad bundles must be rejected,
+and a serving fleet must restart from disk without refitting."""
+import json
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import encoding as E
+from repro.core import gates
+from repro.core.api import (
+    SERVABLE_FORMAT_VERSION,
+    ServableCircuit,
+    read_servable_meta,
+)
+from repro.core.genome import CircuitSpec, init_genome
+from repro.serve.circuits import BUNDLE_SUFFIX, CircuitRegistry, CircuitServer
+
+RNG = np.random.RandomState(0)
+
+
+def make_servable(seed=0, n_feats=5, bits=2, n_nodes=40, n_classes=3,
+                  strategy="quantize", fn_set=gates.FULL_FS):
+    rng = np.random.RandomState(seed)
+    enc = E.fit_encoder(
+        rng.randn(150, n_feats).astype(np.float32),
+        E.EncodingConfig(strategy, bits),
+    )
+    n_out = max(1, int(np.ceil(np.log2(max(n_classes, 2)))))
+    spec = CircuitSpec(enc.n_bits_total, n_nodes, n_out, fn_set)
+    return ServableCircuit(
+        spec, init_genome(jax.random.key(seed), spec), enc, n_classes
+    )
+
+
+# ---------------------------------------------------------------------------
+# Single-artifact bundle
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("strategy,fn_set", [
+    ("quantize", gates.FULL_FS),
+    ("quantile", gates.NAND_FS),
+    ("gray", gates.EXTENDED_FS),
+    ("onehot", gates.FULL_FS),
+])
+def test_save_load_predict_bit_identical(tmp_path, strategy, fn_set):
+    sc = make_servable(seed=11, strategy=strategy, fn_set=fn_set)
+    path = sc.save(str(tmp_path / "artifact"))
+    loaded = ServableCircuit.load(path)
+    assert loaded.spec == sc.spec
+    assert loaded.n_classes == sc.n_classes
+    x = RNG.randn(37, sc.encoder.n_features).astype(np.float32)
+    np.testing.assert_array_equal(loaded.predict(x), sc.predict(x))
+    # loaded artifacts serve identically through the pallas backend too
+    np.testing.assert_array_equal(
+        loaded.predict(x, backend="pallas"), sc.predict(x)
+    )
+
+
+def test_bundle_meta_fields(tmp_path):
+    sc = make_servable(seed=2)
+    path = sc.save(str(tmp_path / "m.npz"), validated_backend="pallas")
+    meta = read_servable_meta(path)
+    assert meta["format_version"] == SERVABLE_FORMAT_VERSION
+    assert meta["validated_backend"] == "pallas"
+    assert meta["spec"]["n_inputs"] == sc.spec.n_inputs
+    assert tuple(meta["spec"]["fn_set"]) == sc.spec.fn_set
+    assert meta["encoder"] == {"strategy": "quantize", "bits": 2}
+    assert meta["n_classes"] == sc.n_classes
+
+
+def _tamper_meta(path, out, **updates):
+    with np.load(path, allow_pickle=False) as z:
+        arrays = {k: z[k] for k in z.files if k != "meta"}
+        meta = json.loads(str(z["meta"]))
+    meta.update(updates)
+    np.savez(out, meta=json.dumps(meta), **arrays)
+    return out
+
+
+def test_load_rejects_future_version_and_wrong_kind(tmp_path):
+    path = make_servable().save(str(tmp_path / "v.npz"))
+    bad_v = _tamper_meta(path, str(tmp_path / "bad_v.npz"),
+                         format_version=SERVABLE_FORMAT_VERSION + 1)
+    with pytest.raises(ValueError, match="format version"):
+        ServableCircuit.load(bad_v)
+    bad_k = _tamper_meta(path, str(tmp_path / "bad_k.npz"),
+                         kind="something-else")
+    with pytest.raises(ValueError, match="not a ServableCircuit"):
+        ServableCircuit.load(bad_k)
+
+
+# ---------------------------------------------------------------------------
+# Registry directory persistence (fleet restart)
+# ---------------------------------------------------------------------------
+
+def _fleet():
+    reg = CircuitRegistry()
+    shapes = [(4, 2, 40, 2), (7, 4, 80, 3), (3, 2, 25, 4), (10, 4, 120, 5)]
+    for i, shape in enumerate(shapes):
+        reg.add(f"t{i}", make_servable(i, *shape))
+    return reg
+
+
+def test_registry_save_dir_load_dir_roundtrip(tmp_path):
+    reg = _fleet()
+    written = reg.save_dir(str(tmp_path))
+    assert len(written) == len(reg)
+    assert all(p.endswith(BUNDLE_SUFFIX) for p in written)
+
+    restarted = CircuitRegistry.load_dir(str(tmp_path))
+    assert sorted(restarted) == sorted(reg)
+    for tenant in reg:
+        x = RNG.randn(23, reg.get(tenant).encoder.n_features) \
+            .astype(np.float32)
+        np.testing.assert_array_equal(
+            restarted.get(tenant).predict(x), reg.get(tenant).predict(x)
+        )
+
+
+def test_server_boots_from_disk_without_refit(tmp_path):
+    """The acceptance-criteria flow: persist → restart → serve, with the
+    restarted fused launch bit-identical to the original fleet."""
+    reg = _fleet()
+    reg.save_dir(str(tmp_path))
+    server = CircuitServer(CircuitRegistry.load_dir(str(tmp_path)))
+    tickets = {}
+    for tenant in reg:
+        x = RNG.randn(17, reg.get(tenant).encoder.n_features) \
+            .astype(np.float32)
+        tickets[tenant] = (server.submit(tenant, x), x)
+    report = server.tick()
+    assert report.launches == 1 and report.tenants == len(reg)
+    for tenant, (ticket, x) in tickets.items():
+        np.testing.assert_array_equal(
+            server.result(ticket), reg.get(tenant).predict(x)
+        )
+
+
+def test_save_dir_prunes_bundles_of_removed_tenants(tmp_path):
+    """save_dir snapshots the registry: a restart must not resurrect
+    tenants the operator removed."""
+    reg = _fleet()
+    reg.save_dir(str(tmp_path))
+    reg.remove("t1")
+    reg.save_dir(str(tmp_path))
+    restarted = CircuitRegistry.load_dir(str(tmp_path))
+    assert sorted(restarted) == sorted(reg)
+    assert "t1" not in restarted
+
+
+def test_save_dir_rejects_unsafe_tenant_names(tmp_path):
+    reg = CircuitRegistry()
+    reg.add("ok", make_servable())
+    reg.add("../evil", make_servable(1))
+    with pytest.raises(ValueError, match="filesystem-safe"):
+        reg.save_dir(str(tmp_path))
+    # names are validated before any write — no partial fleet on disk
+    assert not [f for f in tmp_path.iterdir() if f.name.endswith(BUNDLE_SUFFIX)]
+
+
+# ---------------------------------------------------------------------------
+# Backend name in serving metrics
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_server_stats_report_backend_name(backend):
+    reg = _fleet()
+    server = CircuitServer(reg, backend=backend)
+    server.predict("t0", RNG.randn(4, 4).astype(np.float32))
+    assert server.stats.report()["backend"] == backend
+    server.reset_stats()
+    rep = server.stats.report()
+    assert rep["backend"] == backend and rep["ticks"] == 0

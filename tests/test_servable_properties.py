@@ -1,0 +1,57 @@
+"""Property-based ServableCircuit persistence sweep (requires the optional
+`hypothesis` dev dependency, requirements-dev.txt; skips cleanly where
+missing): save→load→predict is bit-identical for random genomes/encoders."""
+import os
+import tempfile
+
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+import jax  # noqa: E402
+
+from repro.core import encoding as E  # noqa: E402
+from repro.core import gates  # noqa: E402
+from repro.core.api import ServableCircuit  # noqa: E402
+from repro.core.genome import CircuitSpec, init_genome  # noqa: E402
+
+ARTIFACT_ST = st.fixed_dictionaries({
+    "seed": st.integers(0, 2**31 - 1),
+    "n_feats": st.integers(1, 12),
+    "bits": st.integers(1, 4),
+    "n_nodes": st.integers(1, 60),
+    "n_classes": st.integers(2, 8),
+    "strategy": st.sampled_from(E.STRATEGIES),
+    "fn_set": st.sampled_from(
+        [gates.FULL_FS, gates.NAND_FS, gates.EXTENDED_FS]
+    ),
+    "rows": st.integers(1, 70),
+})
+
+
+@settings(max_examples=25, deadline=None)
+@given(cfg=ARTIFACT_ST)
+def test_save_load_predict_roundtrip_bit_identical(cfg):
+    rng = np.random.RandomState(cfg["seed"] % 2**31)
+    enc = E.fit_encoder(
+        rng.randn(60, cfg["n_feats"]).astype(np.float32),
+        E.EncodingConfig(cfg["strategy"], cfg["bits"]),
+    )
+    n_out = max(1, int(np.ceil(np.log2(cfg["n_classes"]))))
+    spec = CircuitSpec(enc.n_bits_total, cfg["n_nodes"], n_out, cfg["fn_set"])
+    sc = ServableCircuit(
+        spec, init_genome(jax.random.key(cfg["seed"]), spec), enc,
+        cfg["n_classes"],
+    )
+    # tempfile (not the tmp_path fixture): hypothesis re-runs the test body
+    # many times per fixture instantiation
+    with tempfile.TemporaryDirectory() as d:
+        loaded = ServableCircuit.load(sc.save(os.path.join(d, "a.npz")))
+    assert loaded.spec == sc.spec
+    np.testing.assert_array_equal(
+        np.asarray(loaded.genome.gate_fn), np.asarray(sc.genome.gate_fn)
+    )
+    x = rng.randn(cfg["rows"], cfg["n_feats"]).astype(np.float32)
+    np.testing.assert_array_equal(loaded.predict(x), sc.predict(x))

@@ -8,8 +8,8 @@ from repro.core import encoding as E
 from repro.core import gates
 from repro.core.api import ServableCircuit
 from repro.core.genome import CircuitSpec, init_genome, opcodes
-from repro.kernels import ops as kernel_ops
 from repro.kernels import ref
+from repro.runtime import get_backend
 from repro.serve.circuits import CircuitRegistry, CircuitServer
 
 RNG = np.random.RandomState(0)
@@ -115,11 +115,11 @@ def test_spans_kernel_matches_ref():
     )
     woff = jnp.arange(5, dtype=jnp.int32) * span
     iw = jnp.asarray(RNG.randint(1, 13, 5).astype(np.int32))
-    a = kernel_ops.eval_population_spans(
-        opc, es, osrc, xw, woff, iw, span_words=span, use_kernel=False
+    a = get_backend("ref").eval_population_spans(
+        opc, es, osrc, xw, woff, iw, span_words=span
     )
-    b = kernel_ops.eval_population_spans(
-        opc, es, osrc, xw, woff, iw, span_words=span, use_kernel=True
+    b = get_backend("pallas").eval_population_spans(
+        opc, es, osrc, xw, woff, iw, span_words=span
     )
     np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
@@ -137,14 +137,13 @@ def test_spans_input_width_masking_isolates_tenants():
     poisoned[5:] = 0xDEADBEEF  # another tenant's bits / garbage
     clean = base.copy()
     clean[5:] = 0
-    for use_kernel in (False, True):
-        a = kernel_ops.eval_population_spans(
-            opc, es, osrc, jnp.asarray(poisoned), woff, iw,
-            span_words=4, use_kernel=use_kernel,
+    for backend in ("ref", "pallas"):
+        be = get_backend(backend)
+        a = be.eval_population_spans(
+            opc, es, osrc, jnp.asarray(poisoned), woff, iw, span_words=4
         )
-        b = kernel_ops.eval_population_spans(
-            opc, es, osrc, jnp.asarray(clean), woff, iw,
-            span_words=4, use_kernel=use_kernel,
+        b = be.eval_population_spans(
+            opc, es, osrc, jnp.asarray(clean), woff, iw, span_words=4
         )
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
@@ -156,10 +155,10 @@ def test_spans_kernel_rejects_misaligned_offsets():
     g = init_genome(jax.random.key(0), spec)
     xw = jnp.zeros((6, 8), jnp.uint32)
     with pytest.raises(ValueError, match="multiples of span_words"):
-        kernel_ops.eval_population_spans(
+        get_backend("pallas").eval_population_spans(
             opcodes(g, spec)[None], g.edge_src[None], g.out_src[None],
             xw, jnp.asarray([3], jnp.int32), jnp.asarray([6], jnp.int32),
-            span_words=4, use_kernel=True,
+            span_words=4,
         )
 
 
@@ -167,10 +166,10 @@ def test_spans_kernel_rejects_misaligned_offsets():
 # Server
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("use_kernel", [False, True])
-def test_server_matches_per_model_predict(registry, use_kernel):
+@pytest.mark.parametrize("backend", ["ref", "pallas"])
+def test_server_matches_per_model_predict(registry, backend):
     """Mixed-width tenants fused into one launch, bit-identical results."""
-    server = CircuitServer(registry, use_kernel=use_kernel)
+    server = CircuitServer(registry, backend=backend)
     tickets = {}
     for i, tenant in enumerate(registry):
         n_feats = registry.get(tenant).encoder.n_features
