@@ -1,7 +1,8 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test lint dev-deps bench-serve example-serve example-quickstart smoke
+.PHONY: test lint dev-deps bench-serve bench-async check-bench \
+        example-serve example-quickstart example-async smoke
 
 dev-deps:
 	$(PYTHON) -m pip install -r requirements-dev.txt
@@ -16,10 +17,21 @@ lint:
 bench-serve:
 	$(PYTHON) benchmarks/serve_circuits.py
 
+bench-async:
+	$(PYTHON) benchmarks/serve_async.py
+
+# validate benchmark output + publish repo-root BENCH_*.json (CI gate)
+check-bench:
+	$(PYTHON) benchmarks/check_bench.py \
+	  serve_circuits:BENCH_serve.json serve_async:BENCH_serve_async.json
+
 example-serve:
 	$(PYTHON) examples/serve_circuits.py
 
 example-quickstart:
 	$(PYTHON) examples/quickstart.py
 
-smoke: example-quickstart example-serve
+example-async:
+	$(PYTHON) examples/serve_async.py
+
+smoke: example-quickstart example-serve example-async

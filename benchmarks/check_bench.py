@@ -1,0 +1,74 @@
+"""Validate serving benchmark output and publish BENCH trajectory files.
+
+CI runs the serving benchmarks, then this checker: it reads each named
+result from ``experiments/results/<name>.json``, fails loudly if the file
+is missing, malformed, empty, or lacking the keys the trajectory tracks,
+and copies it to the repo root under its ``BENCH_*.json`` trajectory name
+(what the workflow uploads as an artifact).  A benchmark that silently
+emitted nothing fails the job here instead of uploading an empty file.
+
+    python benchmarks/check_bench.py serve_circuits:BENCH_serve.json \
+        serve_async:BENCH_serve_async.json
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+RESULTS_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
+                           "experiments", "results")
+REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+# keys every per-backend record must carry for the trajectory to be
+# comparable across PRs
+REQUIRED_KEYS = {
+    "serve_circuits": ("backend", "qps", "p50_tick_ms", "p99_tick_ms",
+                       "mean_occupancy", "parity_mismatches"),
+    "serve_async": ("backend", "miss_rate", "p50_latency_ms",
+                    "p99_latency_ms", "mean_batch_fill", "completed"),
+}
+
+
+def check_one(name: str, dest: str) -> str:
+    src = os.path.join(RESULTS_DIR, f"{name}.json")
+    if not os.path.exists(src):
+        raise SystemExit(f"{name}: no benchmark output at {src}")
+    with open(src) as f:
+        try:
+            payload = json.load(f)
+        except json.JSONDecodeError as e:
+            raise SystemExit(f"{name}: malformed JSON in {src}: {e}") from e
+    if not isinstance(payload, list) or not payload:
+        raise SystemExit(
+            f"{name}: expected a non-empty list of per-backend results, "
+            f"got {type(payload).__name__} "
+            f"({'empty' if not payload else 'non-list'})"
+        )
+    required = REQUIRED_KEYS.get(name, ("backend",))
+    for i, rec in enumerate(payload):
+        missing = [k for k in required if k not in rec]
+        if missing:
+            raise SystemExit(
+                f"{name}: result[{i}] is missing trajectory keys {missing}"
+            )
+    out = os.path.join(REPO_ROOT, dest)
+    with open(out, "w") as f:
+        json.dump(payload, f, indent=1)
+    backends = [r.get("backend") for r in payload]
+    print(f"{name}: {len(payload)} result(s) ({', '.join(backends)}) -> {out}")
+    return out
+
+
+def main(argv: list[str]) -> None:
+    if not argv:
+        raise SystemExit(
+            "usage: check_bench.py <result_name>:<BENCH_dest.json> [...]"
+        )
+    for spec in argv:
+        name, _, dest = spec.partition(":")
+        check_one(name, dest or f"BENCH_{name}.json")
+
+
+if __name__ == "__main__":
+    main(sys.argv[1:])

@@ -21,10 +21,14 @@ not speed).
 from __future__ import annotations
 
 import argparse
+import os
+import sys
 import time
 
 import jax
 import numpy as np
+
+sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
 from benchmarks.common import save_json
 from repro import runtime

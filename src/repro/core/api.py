@@ -68,8 +68,17 @@ def decode_predictions(
     circuit computes garbage bits for those pad rows, so the decode must trim
     to the true row count before the class clamp (out-of-range binary codes
     map to the last class, matching training-time fitness masking).
-    """
-    ids = np.asarray(F.predicted_class_ids(out_words, n_rows))[:n_rows]
+
+    Pure numpy on purpose: this runs on the host per tenant per serving
+    tick with a request-dependent ``n_rows``, and a jnp decode would jit
+    a fresh set of kernels for every new row count (measured: ~0.5 s per
+    novel tick shape — fatal for a deadline scheduler)."""
+    words = np.asarray(out_words)                       # u32[O, W]
+    shifts = np.arange(E.WORD, dtype=np.uint32)
+    bits = (words[..., None] >> shifts) & np.uint32(1)  # (O, W, 32)
+    bits = bits.reshape(words.shape[0], -1)[:, :n_rows].astype(np.int64)
+    weights = (np.int64(1) << np.arange(words.shape[0], dtype=np.int64))
+    ids = (bits * weights[:, None]).sum(axis=0)
     return np.minimum(ids, n_classes - 1)
 
 
@@ -117,6 +126,41 @@ class ServableCircuit:
             jnp.asarray(x_words),
         )
         return decode_predictions(out, r, self.n_classes)
+
+    def serve_async(
+        self, *,
+        backend: "str | runtime.EvalBackend" = "ref",
+        tenant: str = "default",
+        qos=None,
+        clock=None,
+    ):
+        """One-call async serving of this artifact.
+
+        Builds a single-tenant `CircuitRegistry` + `CircuitServer` and
+        returns an (unstarted) `AsyncCircuitServer`; enter it to run the
+        deadline scheduler::
+
+            with sc.serve_async() as frontend:
+                fut = frontend.enqueue("default", x, deadline_s=0.05)
+                ids = fut.result()
+
+        or from a coroutine::
+
+            async with sc.serve_async() as frontend:
+                ids = await frontend.submit("default", x)
+
+        ``qos`` optionally pins the tenant's `TenantQoS`; ``clock``
+        injects a time source (tests).  More tenants can be added to
+        ``frontend.server.registry`` afterwards — this is a convenience
+        entry, not a constraint."""
+        from repro.serve.async_frontend import AsyncCircuitServer
+        from repro.serve.circuits import CircuitRegistry, CircuitServer
+
+        reg = CircuitRegistry()
+        reg.add(tenant, self, qos=qos)
+        server = CircuitServer(reg, backend=backend)
+        kwargs = {} if clock is None else {"clock": clock}
+        return AsyncCircuitServer(server, **kwargs)
 
     # -- persistence ---------------------------------------------------
     def save(

@@ -53,7 +53,9 @@ def eval_circuit_span(
     multi-tenant isolation contract of the spans kernel)."""
     n_in = x_words.shape[0]
     x = jax.lax.dynamic_slice(
-        x_words, (0, word_off.astype(jnp.int32)), (n_in, span_words)
+        x_words,
+        (jnp.zeros((), jnp.int32), word_off.astype(jnp.int32)),
+        (n_in, span_words),
     )
     row = jnp.arange(n_in, dtype=jnp.int32)[:, None]
     x = jnp.where(row < in_width, x, jnp.uint32(0))

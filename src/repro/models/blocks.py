@@ -270,20 +270,27 @@ def _cache_write(cache, new_row, write_pos):
             )
             def upd(c_loc, r_loc, p):
                 t_loc = c_loc.shape[1]
-                m = jax.lax.axis_index(axes.tp)
+                m = jax.lax.axis_index(axes.tp).astype(p.dtype)
                 slot = p - m * t_loc
                 ok = (slot >= 0) & (slot < t_loc)
                 slot_c = jnp.clip(slot, 0, t_loc - 1)
+                # literal 0 indices weakly type to int64 under x64; keep
+                # every index in the traced position's dtype
+                zero = jnp.zeros((), slot_c.dtype)
                 old = jax.lax.dynamic_slice(
-                    c_loc, (0, slot_c, 0, 0), r_loc.shape
+                    c_loc, (zero, slot_c, zero, zero), r_loc.shape
                 )
                 val = jnp.where(ok, r_loc, old)
                 return jax.lax.dynamic_update_slice(
-                    c_loc, val, (0, slot_c, 0, 0)
+                    c_loc, val, (zero, slot_c, zero, zero)
                 )
 
             return upd(cache, new_row, write_pos)
-    return jax.lax.dynamic_update_slice(cache, new_row, (0, write_pos, 0, 0))
+    write_pos = jnp.asarray(write_pos)
+    zero = jnp.zeros((), write_pos.dtype)
+    return jax.lax.dynamic_update_slice(
+        cache, new_row, (zero, write_pos, zero, zero)
+    )
 
 
 def _fsdp_size(mesh, axes) -> int:

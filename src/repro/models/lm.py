@@ -364,7 +364,11 @@ def decode_step(
     elif cfg.block_kind == "hybrid":
         cache = dict(cache)
         w = cache["k"].shape[2]
-        slot = pos % w
+        # literal 0 indices weakly type to int64 under x64; keep every
+        # dynamic_update_slice index in the traced position's dtype
+        pos_i = jnp.asarray(pos)
+        zero = jnp.zeros((), pos_i.dtype)
+        slot = pos_i % w
         g = 0
         for i in range(cfg.n_layers):
             lp = _layer_slice(params["blocks"], i)
@@ -378,10 +382,10 @@ def decode_step(
 
             if is_global:
                 kc = jax.lax.dynamic_update_slice(
-                    cache["gk"][g], k, (0, pos, 0, 0)
+                    cache["gk"][g], k, (zero, pos_i, zero, zero)
                 )
                 vc = jax.lax.dynamic_update_slice(
-                    cache["gv"][g], v, (0, pos, 0, 0)
+                    cache["gv"][g], v, (zero, pos_i, zero, zero)
                 )
                 cache["gk"] = cache["gk"].at[g].set(kc)
                 cache["gv"] = cache["gv"].at[g].set(vc)
@@ -389,10 +393,10 @@ def decode_step(
                 g += 1
             else:
                 kc = jax.lax.dynamic_update_slice(
-                    cache["k"][i], k, (0, slot, 0, 0)
+                    cache["k"][i], k, (zero, slot, zero, zero)
                 )
                 vc = jax.lax.dynamic_update_slice(
-                    cache["v"][i], v, (0, slot, 0, 0)
+                    cache["v"][i], v, (zero, slot, zero, zero)
                 )
                 cache["k"] = cache["k"].at[i].set(kc)
                 cache["v"] = cache["v"].at[i].set(vc)

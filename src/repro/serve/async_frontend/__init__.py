@@ -1,0 +1,26 @@
+"""Deadline-aware async serving front-end over `repro.serve.circuits`.
+
+The first genuinely concurrent layer of the serving stack: per-tenant
+request queues (`queue`), a pure deadline/batching scheduler that decides
+when the fused launch fires (`scheduler`), and the asyncio-friendly
+`AsyncCircuitServer` facade that wires both onto a synchronous
+`CircuitServer` (`frontend`).
+"""
+from repro.serve.async_frontend.frontend import AsyncCircuitServer
+from repro.serve.async_frontend.queue import (
+    AdmissionError,
+    DeadlineExceededError,
+    Request,
+    RequestQueue,
+)
+from repro.serve.async_frontend.scheduler import DeadlineScheduler, FireDecision
+
+__all__ = [
+    "AdmissionError",
+    "AsyncCircuitServer",
+    "DeadlineExceededError",
+    "DeadlineScheduler",
+    "FireDecision",
+    "Request",
+    "RequestQueue",
+]

@@ -1,0 +1,258 @@
+"""AsyncCircuitServer: asyncio-friendly, deadline-aware serving facade.
+
+Wraps a synchronous `CircuitServer` and inverts who drives launches: the
+caller enqueues requests with deadlines and gets a future; a
+`DeadlineScheduler` decides when the next fused `eval_population_spans`
+launch fires; `CircuitServer.step()` executes it.  Three ways to drive:
+
+  * ``await frontend.submit(tenant, x, deadline_s=...)`` from a coroutine
+    (with the background driver thread started — ``start()``/``stop()``
+    or ``with``/``async with``);
+  * ``frontend.enqueue(...)`` from plain threaded code, returning a
+    `concurrent.futures.Future`;
+  * ``frontend.pump(now)`` for deterministic single-step scheduling under
+    an injected fake clock (how the tests drive it).
+
+Admission control rejects requests whose deadline has already passed at
+submit; the scheduler sheds queued requests whose deadline passes before
+a launch can carry them (their future fails with
+`DeadlineExceededError`).  `FrontendStats` counts both as deadline
+misses, alongside per-request latency percentiles, queue depth, and
+batch fill.
+"""
+from __future__ import annotations
+
+import asyncio
+import threading
+import time
+import traceback
+import warnings
+from concurrent.futures import Future
+from typing import Awaitable, Callable
+
+import numpy as np
+
+from repro.serve.async_frontend.queue import (
+    AdmissionError,
+    DeadlineExceededError,
+    Request,
+)
+from repro.serve.async_frontend.scheduler import DeadlineScheduler, FireDecision
+from repro.serve.circuits.metrics import FrontendStats
+from repro.serve.circuits.registry import DEFAULT_QOS
+from repro.serve.circuits.server import CircuitServer
+
+
+class AsyncCircuitServer:
+    """Deadline-aware front-end over one synchronous `CircuitServer`."""
+
+    def __init__(
+        self,
+        server: CircuitServer,
+        *,
+        clock: Callable[[], float] = time.monotonic,
+        idle_poll_s: float = 0.050,
+        latency_est_s: float = 0.0,
+    ):
+        self.server = server
+        self.clock = clock
+        self.idle_poll_s = float(idle_poll_s)
+        self.scheduler = DeadlineScheduler(
+            self._qos_for, latency_est_s=latency_est_s
+        )
+        self.stats = FrontendStats(backend=server.backend.name)
+        self._lock = threading.Lock()
+        self._wake = threading.Event()
+        self._stop = threading.Event()
+        self._thread: threading.Thread | None = None
+
+    def _qos_for(self, tenant: str):
+        """Registry QoS, falling back to defaults for tenants removed with
+        requests still queued (their requests must still fire so the
+        server can fail them individually)."""
+        try:
+            return self.server.registry.qos(tenant)
+        except KeyError:
+            return DEFAULT_QOS
+
+    # -- request interface --------------------------------------------
+    def enqueue(
+        self,
+        tenant: str,
+        x: np.ndarray,
+        *,
+        deadline_s: float | None = None,
+        deadline: float | None = None,
+    ) -> Future:
+        """Admit rows for one tenant; returns a `concurrent.futures.Future`
+        resolving to class ids.
+
+        ``deadline`` is absolute (front-end clock domain); ``deadline_s``
+        is relative to now; neither falls back to the tenant's QoS
+        ``default_deadline_s``.  Raises `AdmissionError` if the deadline
+        has already passed, `KeyError`/`ValueError` for unknown tenants or
+        wrong feature width — load shedding at the door, before the
+        request can cost an encode or a queue slot."""
+        now = self.clock()
+        qos = self.server.registry.qos(tenant)  # KeyError for unknown tenant
+        x = np.atleast_2d(np.asarray(x, np.float32))
+        want = self.server.registry.get(tenant).encoder.n_features
+        if x.shape[1] != want:
+            raise ValueError(
+                f"tenant {tenant!r} expects {want} features, got {x.shape[1]}"
+            )
+        if deadline is None:
+            deadline = now + (
+                qos.default_deadline_s if deadline_s is None else deadline_s
+            )
+        if deadline <= now:
+            self.stats.record_rejected()
+            raise AdmissionError(
+                f"tenant {tenant!r}: deadline {deadline:.6f} already passed "
+                f"at submit (now={now:.6f})"
+            )
+        fut: Future = Future()
+        req = Request(
+            tenant_id=tenant, features=x, deadline=float(deadline),
+            future=fut, submitted_at=now,
+        )
+        with self._lock:
+            self.scheduler.push(req)
+            self.stats.submitted += 1
+        self._wake.set()
+        return fut
+
+    def submit(
+        self,
+        tenant: str,
+        x: np.ndarray,
+        *,
+        deadline_s: float | None = None,
+        deadline: float | None = None,
+    ) -> "Awaitable[np.ndarray]":
+        """asyncio facade: ``ids = await frontend.submit(tenant, x)``.
+
+        Must be called with a running event loop; admission errors raise
+        immediately (not through the awaitable)."""
+        fut = self.enqueue(tenant, x, deadline_s=deadline_s, deadline=deadline)
+        return asyncio.wrap_future(fut)
+
+    # -- scheduling ----------------------------------------------------
+    def pump(self, now: float | None = None) -> FireDecision:
+        """One deterministic scheduler step: shed, then fire if due.
+
+        The manual-drive alternative to the background thread — tests call
+        this with a fake clock; a caller embedding the front-end in its
+        own loop can call it instead of ``start()``."""
+        now = self.clock() if now is None else now
+        with self._lock:
+            decision = self.scheduler.poll(now)
+            self.stats.record_poll(decision.queue_rows)
+        self._complete(decision, now)
+        return decision
+
+    def _complete(self, decision: FireDecision, now: float) -> None:
+        for req in decision.expired:
+            self.stats.record_shed(1)
+            req.future.set_exception(DeadlineExceededError(
+                f"tenant {req.tenant_id!r}: deadline passed after "
+                f"{now - req.submitted_at:.6f}s in queue"
+            ))
+        if not decision.batch:
+            return
+        try:
+            outs = self.server.step(
+                [(r.tenant_id, r.features) for r in decision.batch]
+            )
+        except Exception as err:  # noqa: BLE001 — a failed launch must fail
+            # its own requests' futures, never strand them (or, from the
+            # background driver, kill the scheduler thread)
+            for r in decision.batch:
+                r.future.set_exception(err)
+            raise
+        done = self.clock()
+        self.scheduler.observe_latency(done - now)
+        with self._lock:
+            self.stats.record_fire(
+                decision.reason, self.scheduler.batch_fill(decision.batch)
+            )
+        for req, out in zip(decision.batch, outs):
+            self.stats.record_request(
+                done - req.submitted_at, late=done > req.deadline
+            )
+            if isinstance(out, Exception):
+                req.future.set_exception(out)
+            else:
+                req.future.set_result(out)
+
+    # -- background driver ---------------------------------------------
+    def _run(self) -> None:
+        while not self._stop.is_set():
+            try:
+                decision = self.pump()
+            except Exception:  # noqa: BLE001 — the scheduler thread must
+                # survive a failed launch; the batch's futures already
+                # carry the error (see _complete), so callers see it
+                warnings.warn(
+                    "async serving launch failed; affected request futures "
+                    f"carry the error:\n{traceback.format_exc()}",
+                    RuntimeWarning, stacklevel=1,
+                )
+                continue
+            if decision.batch or decision.expired:
+                continue  # re-poll immediately: leftovers may be due
+            now = self.clock()
+            if decision.next_wake is None:
+                wait = self.idle_poll_s
+            else:
+                wait = max(decision.next_wake - now, 0.0)
+            self._wake.wait(wait)
+            self._wake.clear()
+
+    def start(self) -> "AsyncCircuitServer":
+        """Start the scheduler thread (idempotent)."""
+        if self._thread is None or not self._thread.is_alive():
+            self._stop.clear()
+            self._thread = threading.Thread(
+                target=self._run, name="circuit-serve-scheduler", daemon=True
+            )
+            self._thread.start()
+        return self
+
+    def stop(self, drain: bool = True, timeout: float = 5.0) -> None:
+        """Stop the scheduler thread.  With ``drain`` (default), pending
+        requests get one final poll at +inf deadline pressure — i.e. they
+        are either served now or shed — so no future is left unresolved."""
+        self._stop.set()
+        self._wake.set()
+        if self._thread is not None:
+            self._thread.join(timeout)
+            self._thread = None
+        if drain:
+            while self.scheduler.pending_requests():
+                decision = self.pump()
+                if not (decision.batch or decision.expired):
+                    # nothing due yet — force the stragglers out now
+                    self._drain_now()
+                    break
+
+    def _drain_now(self) -> None:
+        with self._lock:
+            batch = self.scheduler.drain_all()
+        if batch:
+            self._complete(
+                FireDecision(batch, [], "drain", None, 0), self.clock()
+            )
+
+    # -- context managers ----------------------------------------------
+    def __enter__(self) -> "AsyncCircuitServer":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    async def __aenter__(self) -> "AsyncCircuitServer":
+        return self.start()
+
+    async def __aexit__(self, *exc) -> None:
+        await asyncio.to_thread(self.stop)

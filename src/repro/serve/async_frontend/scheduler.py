@@ -1,0 +1,139 @@
+"""Deadline-aware tick scheduler: decides *when* the fused launch fires.
+
+The synchronous `CircuitServer` serves whatever is pending the moment the
+caller ticks it.  The scheduler inverts that: requests accumulate in
+per-tenant `RequestQueue`s and every `poll(now)` answers one question —
+fire a launch now, or sleep until when?  Three triggers fire a launch:
+
+  * **deadline** — the earliest queued deadline, minus the EWMA estimate
+    of launch latency and a safety margin, has arrived.  Firing early is
+    the whole game: a launch started at the deadline has already missed.
+  * **batch_full** — some tenant has at least ``max_batch`` rows queued;
+    waiting longer cannot improve its batch fill.
+  * **max_wait** — the oldest queued request has waited its tenant's
+    ``max_wait_s``; bounded staleness even with lazy deadlines.
+
+When a launch fires, *every* tenant with queued work rides it (that is
+what the fused spans kernel is for), but each contributes at most its
+``max_batch`` rows — so one tenant's backlog can delay, never displace,
+another tenant's deadline-critical rows.
+
+The scheduler is a pure decision core: no threads, no asyncio, no real
+clock.  Time enters only through ``poll(now)`` / ``push``; tests drive it
+with a fake clock, the front-end drives it with ``time.monotonic``.
+"""
+from __future__ import annotations
+
+from typing import Callable, NamedTuple
+
+from repro.serve.async_frontend.queue import Request, RequestQueue
+from repro.serve.circuits.registry import TenantQoS
+
+
+class FireDecision(NamedTuple):
+    """What one scheduler poll decided."""
+
+    batch: list[Request]     # requests to serve in one fused launch now
+    expired: list[Request]   # requests shed this poll (deadline passed)
+    reason: str              # "deadline" | "batch_full" | "max_wait" | ""
+    next_wake: float | None  # absolute time of the next scheduled action
+    queue_rows: int          # rows queued at poll time (pre-drain)
+
+
+class DeadlineScheduler:
+    """Pure deadline/batching policy over per-tenant request queues."""
+
+    def __init__(
+        self,
+        qos_for: Callable[[str], TenantQoS],
+        *,
+        latency_est_s: float = 0.0,
+        latency_ewma: float = 0.25,
+        safety_margin_s: float = 1e-3,
+    ):
+        self._qos_for = qos_for
+        self._queues: dict[str, RequestQueue] = {}
+        self.latency_est_s = float(latency_est_s)
+        self.latency_ewma = float(latency_ewma)
+        self.safety_margin_s = float(safety_margin_s)
+
+    # -- queue interface ----------------------------------------------
+    def push(self, req: Request) -> None:
+        q = self._queues.get(req.tenant_id)
+        if q is None:
+            q = self._queues[req.tenant_id] = RequestQueue(req.tenant_id)
+        q.push(req)
+
+    def queue_rows(self) -> int:
+        return sum(q.rows() for q in self._queues.values())
+
+    def pending_requests(self) -> int:
+        return sum(len(q) for q in self._queues.values())
+
+    def drain_all(self) -> list[Request]:
+        """Unconditionally drain every queued request — shutdown path,
+        where the only alternatives are serving early or dropping work on
+        the floor."""
+        batch: list[Request] = []
+        for q in self._queues.values():
+            while len(q):
+                batch.extend(q.take(self._qos_for(q.tenant_id).max_batch))
+        return batch
+
+    def observe_latency(self, latency_s: float) -> None:
+        """Fold one measured launch latency into the EWMA the deadline
+        trigger subtracts when deciding how early to fire."""
+        a = self.latency_ewma
+        self.latency_est_s = (1 - a) * self.latency_est_s + a * latency_s
+
+    # -- the decision --------------------------------------------------
+    def _fire_time(self, deadline: float) -> float:
+        return deadline - self.latency_est_s - self.safety_margin_s
+
+    def poll(self, now: float) -> FireDecision:
+        """Shed expired requests, then fire or report when to wake."""
+        queue_rows = self.queue_rows()
+        expired: list[Request] = []
+        for q in self._queues.values():
+            expired.extend(q.expire(now))
+
+        reason = ""
+        next_wake: float | None = None
+        for tenant, q in self._queues.items():
+            if not len(q):
+                continue
+            qos = self._qos_for(tenant)
+            d = q.earliest_deadline()
+            t_deadline = self._fire_time(d)
+            t_wait = q.oldest_arrival() + qos.max_wait_s
+            if t_deadline <= now:
+                reason = "deadline"
+                break
+            if q.rows() >= qos.max_batch:
+                reason = "batch_full"
+                break
+            if t_wait <= now:
+                reason = "max_wait"
+                break
+            t_next = min(t_deadline, t_wait)
+            next_wake = t_next if next_wake is None else min(next_wake, t_next)
+
+        if not reason:
+            return FireDecision([], expired, "", next_wake, queue_rows)
+
+        batch: list[Request] = []
+        for tenant, q in self._queues.items():
+            if len(q):
+                batch.extend(q.take(self._qos_for(tenant).max_batch))
+        # leftovers (beyond max_batch) exist: the front-end re-polls right
+        # after a fire, so they get a fresh decision immediately
+        return FireDecision(batch, expired, reason, None, queue_rows)
+
+    def batch_fill(self, batch: list[Request]) -> float:
+        """Fired rows over the fired tenants' max_batch budget (can top 1.0
+        only when a single oversized request exceeds its tenant's budget)."""
+        if not batch:
+            return 0.0
+        tenants = {r.tenant_id for r in batch}
+        cap = sum(self._qos_for(t).max_batch for t in tenants)
+        return sum(r.rows for r in batch) / cap

@@ -5,19 +5,24 @@ classifiers (tenants) share one `eval_population_spans` launch per serving
 tick.  See `registry` (genome padding / hot add-remove), `server` (the
 micro-batching engine) and `metrics` (QPS / latency / occupancy reports).
 """
-from repro.serve.circuits.metrics import ServerStats, TickReport
+from repro.serve.circuits.metrics import FrontendStats, ServerStats, TickReport
 from repro.serve.circuits.registry import (
     BUNDLE_SUFFIX,
+    DEFAULT_QOS,
     CircuitRegistry,
     PopulationPlan,
+    TenantQoS,
 )
 from repro.serve.circuits.server import CircuitServer
 
 __all__ = [
     "BUNDLE_SUFFIX",
+    "DEFAULT_QOS",
     "CircuitRegistry",
     "CircuitServer",
+    "FrontendStats",
     "PopulationPlan",
     "ServerStats",
+    "TenantQoS",
     "TickReport",
 ]

@@ -5,13 +5,26 @@ accumulates them into the numbers an operator actually watches: QPS,
 rows/s, p50/p99 tick latency, and kernel occupancy (the fraction of
 row-lanes in the fused launch that carried real requests rather than
 word-boundary or span padding).
+
+`FrontendStats` is the request-level companion for the async front-end
+(`repro.serve.async_frontend`): per-request latency percentiles, the
+deadline-miss rate (shed + served-late), admission rejects, queue depth,
+and batch fill (how full the deadline scheduler's coalesced launches run
+against the tenants' `max_batch` budgets).
 """
 from __future__ import annotations
 
+import collections
 import dataclasses
+import functools
 import time
 
 import numpy as np
+
+# samples kept per percentile window — long-running servers must not grow
+# memory per request/poll; report() percentiles cover the trailing window
+STATS_WINDOW = 8192
+_window = functools.partial(collections.deque, maxlen=STATS_WINDOW)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -47,8 +60,12 @@ class ServerStats:
     launches: int = 0
     requests: int = 0
     rows: int = 0
-    tick_latencies_s: list = dataclasses.field(default_factory=list)
-    occupancies: list = dataclasses.field(default_factory=list)
+    tick_latencies_s: collections.deque = dataclasses.field(
+        default_factory=_window
+    )
+    occupancies: collections.deque = dataclasses.field(
+        default_factory=_window
+    )
     max_tenants_per_launch: int = 0
 
     def record(self, report: TickReport) -> None:
@@ -84,4 +101,80 @@ class ServerStats:
             "p99_tick_ms": round(float(np.percentile(lat, 99)) * 1e3, 3),
             "mean_occupancy": round(float(occ.mean()), 4),
             "max_tenants_per_launch": self.max_tenants_per_launch,
+        }
+
+
+@dataclasses.dataclass
+class FrontendStats:
+    """Request-level accounting for the deadline-aware async front-end.
+
+    A request ends in exactly one of four states: ``rejected`` (admission
+    control: its deadline had already passed at submit), ``shed`` (expired
+    in the queue before any launch could carry it), ``served_late``
+    (completed, but after its deadline), or on-time.  The miss rate the
+    BENCH trajectory tracks counts shed + served-late over every admitted
+    request."""
+
+    backend: str = "ref"
+    submitted: int = 0         # admitted into the queue
+    completed: int = 0         # futures resolved with a result or error
+    rejected: int = 0          # admission control turned the submit away
+    shed: int = 0              # expired in queue, future failed
+    served_late: int = 0       # served, but past the deadline
+    fires: int = 0             # scheduler-initiated launches
+    fire_reasons: dict = dataclasses.field(default_factory=dict)
+    request_latencies_s: collections.deque = dataclasses.field(
+        default_factory=_window
+    )
+    batch_fills: collections.deque = dataclasses.field(
+        default_factory=_window
+    )
+    queue_depth_rows: collections.deque = dataclasses.field(
+        default_factory=_window
+    )
+
+    @property
+    def deadline_misses(self) -> int:
+        return self.shed + self.served_late
+
+    def record_poll(self, queue_rows: int) -> None:
+        self.queue_depth_rows.append(queue_rows)
+
+    def record_shed(self, n: int) -> None:
+        self.shed += n
+
+    def record_rejected(self) -> None:
+        self.rejected += 1
+
+    def record_fire(self, reason: str, fill: float) -> None:
+        self.fires += 1
+        self.fire_reasons[reason] = self.fire_reasons.get(reason, 0) + 1
+        self.batch_fills.append(fill)
+
+    def record_request(self, latency_s: float, late: bool) -> None:
+        self.completed += 1
+        self.request_latencies_s.append(latency_s)
+        if late:
+            self.served_late += 1
+
+    def report(self) -> dict:
+        lat = np.asarray(self.request_latencies_s or [0.0])
+        fill = np.asarray(self.batch_fills or [0.0])
+        depth = np.asarray(self.queue_depth_rows or [0])
+        admitted = max(self.submitted, 1)
+        return {
+            "backend": self.backend,
+            "submitted": self.submitted,
+            "completed": self.completed,
+            "rejected": self.rejected,
+            "shed": self.shed,
+            "served_late": self.served_late,
+            "deadline_misses": self.deadline_misses,
+            "miss_rate": round(self.deadline_misses / admitted, 4),
+            "fires": self.fires,
+            "fire_reasons": dict(self.fire_reasons),
+            "p50_latency_ms": round(float(np.percentile(lat, 50)) * 1e3, 3),
+            "p99_latency_ms": round(float(np.percentile(lat, 99)) * 1e3, 3),
+            "mean_batch_fill": round(float(fill.mean()), 4),
+            "max_queue_depth_rows": int(depth.max()),
         }

@@ -22,6 +22,7 @@ and any jit cache keyed on their shapes — must be refreshed.
 """
 from __future__ import annotations
 
+import dataclasses
 import os
 import threading
 from typing import Iterator, NamedTuple
@@ -35,6 +36,39 @@ from repro.core.genome import validate_genome
 
 # filename suffix for per-tenant artifact bundles in a registry directory
 BUNDLE_SUFFIX = ".circuit.npz"
+
+
+@dataclasses.dataclass(frozen=True)
+class TenantQoS:
+    """Per-tenant quality-of-service knobs for the async front-end.
+
+    The deadline scheduler reads these live (no registry generation bump —
+    QoS never changes the stacked kernel tensors):
+
+      * ``max_batch`` — rows the scheduler coalesces for this tenant per
+        fused launch; a backlogged tenant contributes at most this many
+        rows to any launch, so its queue cannot crowd out other tenants.
+      * ``max_wait_s`` — longest a request may sit queued before the
+        scheduler fires a launch regardless of batch fill or deadlines.
+      * ``default_deadline_s`` — deadline assigned to submits that do not
+        carry an explicit one.
+    """
+
+    max_batch: int = 256
+    max_wait_s: float = 0.005
+    default_deadline_s: float = 0.100
+
+    def __post_init__(self):
+        if self.max_batch < 1:
+            raise ValueError(f"max_batch must be >= 1, got {self.max_batch}")
+        if self.max_wait_s < 0 or self.default_deadline_s <= 0:
+            raise ValueError(
+                "max_wait_s must be >= 0 and default_deadline_s > 0, got "
+                f"({self.max_wait_s}, {self.default_deadline_s})"
+            )
+
+
+DEFAULT_QOS = TenantQoS()
 
 
 class PopulationPlan(NamedTuple):
@@ -92,28 +126,54 @@ class CircuitRegistry:
     def __init__(self):
         self._lock = threading.Lock()
         self._entries: dict[str, ServableCircuit] = {}
+        self._qos: dict[str, TenantQoS] = {}
         self._generation = 0
         self._plan: PopulationPlan | None = None
 
     # -- mutation ------------------------------------------------------
     def add(self, tenant: str, circuit: ServableCircuit,
-            replace: bool = False) -> int:
+            replace: bool = False, qos: TenantQoS | None = None) -> int:
         """Register (or with replace=True, hot-swap) a tenant's circuit.
-        Returns the new registry generation."""
+        Returns the new registry generation.  ``qos`` optionally pins the
+        tenant's serving QoS (defaults to `DEFAULT_QOS`; a hot-swap without
+        an explicit qos keeps the existing one)."""
         if not validate_genome(circuit.genome, circuit.spec):
             raise ValueError(f"tenant {tenant!r}: genome fails validation")
         with self._lock:
             if tenant in self._entries and not replace:
                 raise KeyError(f"tenant {tenant!r} already registered")
             self._entries[tenant] = circuit
+            if qos is not None:
+                self._qos[tenant] = qos
             self._generation += 1
             return self._generation
 
     def remove(self, tenant: str) -> int:
         with self._lock:
             del self._entries[tenant]
+            self._qos.pop(tenant, None)
             self._generation += 1
             return self._generation
+
+    # -- QoS -----------------------------------------------------------
+    def qos(self, tenant: str) -> TenantQoS:
+        """The tenant's serving QoS (DEFAULT_QOS unless pinned).
+
+        Raises KeyError for unregistered tenants so schedulers cannot
+        silently queue work for a tenant that will never be served."""
+        with self._lock:
+            if tenant not in self._entries:
+                raise KeyError(f"unknown tenant {tenant!r}")
+            return self._qos.get(tenant, DEFAULT_QOS)
+
+    def set_qos(self, tenant: str, qos: TenantQoS) -> None:
+        """Re-pin a registered tenant's QoS.  Takes effect on the next
+        scheduler poll; does not bump the registry generation (QoS never
+        changes the stacked kernel tensors)."""
+        with self._lock:
+            if tenant not in self._entries:
+                raise KeyError(f"unknown tenant {tenant!r}")
+            self._qos[tenant] = qos
 
     # -- persistence ---------------------------------------------------
     def save_dir(

@@ -58,12 +58,25 @@ class CircuitServer:
         *,
         backend: "str | runtime.EvalBackend" = "ref",
         span_align: int = 1,
+        stable_shapes: bool = True,
     ):
         self.registry = registry
         self.backend = runtime.resolve_backend(backend)
         self.span_align = max(int(span_align), 1)
+        # pad every launch to the full plan's tenant count (idle slots are
+        # masked off with in_width=0) so the jitted launch shape depends
+        # only on the span bucket and the registry generation — not on
+        # which subset of tenants happens to be busy.  Without this, a
+        # deadline scheduler driving launches hits a fresh XLA compile
+        # (seconds) whenever a new active-tenant count shows up, which is
+        # exactly when requests are queued against a deadline.
+        self.stable_shapes = bool(stable_shapes)
         self.stats = ServerStats(backend=self.backend.name)
         self._lock = threading.Lock()
+        # serializes whole launches: a step() must observe its own tick
+        # serving its tickets, not race a concurrent tick()/predict()
+        # that snapshots them first (RLock: step's tick nests inside)
+        self._serve_lock = threading.RLock()
         self._pending: dict[str, list[_Pending]] = {}
         self._results: dict[int, np.ndarray] = {}
         self._next_ticket = 0
@@ -108,6 +121,35 @@ class CircuitServer:
         self.tick()
         return self.result(ticket)
 
+    def step(
+        self, work: "list[tuple[str, np.ndarray]]"
+    ) -> "list[np.ndarray | Exception]":
+        """Single-launch hook for external schedulers (the async front-end).
+
+        Submits the given ``(tenant, rows)`` work items, runs exactly one
+        fused tick, and returns each item's class ids — or its per-request
+        serving error (bad tenant, hot remove, width mismatch) as an
+        Exception instance instead of raising — in input order.  The caller
+        owns *when* this fires; the server still owns *how* (encode → fuse
+        → one `eval_population_spans` launch).
+
+        Atomic against concurrent `tick()`/`predict()` on the same server:
+        the whole submit→tick→collect sequence holds the serve lock, so
+        another thread's tick cannot steal this step's tickets mid-flight.
+        """
+        with self._serve_lock:
+            tickets: list = []
+            for tenant, x in work:
+                try:
+                    tickets.append(self.submit(tenant, x))
+                except Exception as err:  # noqa: BLE001 — per-item isolation
+                    tickets.append(err)
+            self.tick()
+            return [
+                t if isinstance(t, Exception) else self._results.pop(t)
+                for t in tickets
+            ]
+
     def pending_rows(self) -> int:
         with self._lock:
             return sum(
@@ -129,6 +171,10 @@ class CircuitServer:
 
     def tick(self) -> TickReport:
         """Serve every pending request in at most one fused launch."""
+        with self._serve_lock:
+            return self._tick_locked()
+
+    def _tick_locked(self) -> TickReport:
         t0 = time.perf_counter()
         # Snapshot pending BEFORE the plan: any tenant that reached the
         # queue was registered at submit time, so a plan refreshed now can
@@ -181,28 +227,34 @@ class CircuitServer:
         # Fuse: tenant k owns words [k*span, (k+1)*span) of one buffer.
         # Spans are bucketed to powers of two so jit sees a bounded set of
         # shapes across ticks instead of recompiling per traffic level.
+        # With stable_shapes the tenant axis is padded to the full plan the
+        # same way: pad slots gather slot 0's genome but carry in_width=0,
+        # so their rows are fully masked and their outputs never read.
         k_active = len(work)
         rows = [int(offsets[-1]) for _, _, _, offsets in work]
         span = max(E.n_words(r) for r in rows)
         span = 1 << (span - 1).bit_length()
         span = -(-span // self.span_align) * self.span_align
+        k_pad = plan.n_tenants if self.stable_shapes else k_active
         i_max = int(plan.in_width.max())
-        x_buf = np.zeros((i_max, k_active * span), np.uint32)
+        x_buf = np.zeros((i_max, k_pad * span), np.uint32)
         for k, (slot, _, bits, offsets) in enumerate(work):
             w_t = E.n_words(int(offsets[-1]))
             packed = E.pack_bits_rows(bits, w_t)
             x_buf[: packed.shape[0], k * span : k * span + w_t] = packed
 
-        slots = np.asarray([w[0] for w in work])
+        slots = np.zeros(k_pad, np.int64)
+        slots[:k_active] = [w[0] for w in work]
+        live = jnp.asarray((np.arange(k_pad) < k_active).astype(np.int32))
         opc, edge, outs, in_w = dev
         out = self.backend.eval_population_spans(
             opc[slots], edge[slots], outs[slots],
             jnp.asarray(x_buf),
-            jnp.arange(k_active, dtype=jnp.int32) * span,
-            in_w[slots],
+            jnp.arange(k_pad, dtype=jnp.int32) * span,
+            in_w[slots] * live,
             span_words=span,
         )
-        out = np.asarray(out)  # u32[K, O_max, span]
+        out = np.asarray(out)  # u32[K_pad, O_max, span]
 
         # Scatter class ids back to the originating requests.
         for k, (slot, reqs, _, offsets) in enumerate(work):
@@ -222,7 +274,7 @@ class CircuitServer:
             launches=1,
             span_words=span,
             latency_s=time.perf_counter() - t0,
-            occupancy=total_rows / (k_active * span * E.WORD),
+            occupancy=total_rows / (k_pad * span * E.WORD),
         )
         self.stats.record(report)
         return report

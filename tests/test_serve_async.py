@@ -1,0 +1,370 @@
+"""Deadline-aware async serving front-end (queue, scheduler, facade).
+
+The scheduler is a pure decision core, so everything timing-related runs
+under a fake clock — every fire/shed/wake decision here is deterministic.
+Only the last tests (background thread, asyncio facade) touch real time,
+and they assert parity, not timing.
+"""
+import asyncio
+from concurrent.futures import Future
+
+import numpy as np
+import pytest
+
+from repro.serve.async_frontend import (
+    AdmissionError,
+    AsyncCircuitServer,
+    DeadlineExceededError,
+    DeadlineScheduler,
+    Request,
+)
+from repro.serve.circuits import (
+    DEFAULT_QOS,
+    CircuitRegistry,
+    CircuitServer,
+    TenantQoS,
+)
+from tests.test_serve_circuits import TENANT_SHAPES, make_servable
+
+RNG = np.random.RandomState(7)
+
+
+class FakeClock:
+    def __init__(self, t: float = 0.0):
+        self.t = t
+
+    def __call__(self) -> float:
+        return self.t
+
+
+def req(tenant, rows, deadline, *, now=0.0, n_feats=4) -> Request:
+    return Request(
+        tenant_id=tenant,
+        features=np.zeros((rows, n_feats), np.float32),
+        deadline=deadline, future=Future(), submitted_at=now,
+    )
+
+
+def sched(qos: TenantQoS, **kw) -> DeadlineScheduler:
+    kw.setdefault("safety_margin_s", 0.0)
+    return DeadlineScheduler(lambda t: qos, **kw)
+
+
+# ---------------------------------------------------------------------------
+# DeadlineScheduler (pure, fake time)
+# ---------------------------------------------------------------------------
+
+LAZY = TenantQoS(max_batch=10**6, max_wait_s=100.0, default_deadline_s=1.0)
+
+
+def test_scheduler_fires_on_deadline_minus_latency_estimate():
+    s = sched(LAZY, latency_est_s=0.1)
+    s.push(req("a", 4, deadline=1.0))
+    d = s.poll(0.5)
+    assert not d.batch and not d.expired and d.reason == ""
+    assert d.next_wake == pytest.approx(0.9)  # deadline - est latency
+    assert not s.poll(0.89).batch
+    d = s.poll(0.9)
+    assert d.reason == "deadline" and len(d.batch) == 1
+    assert s.pending_requests() == 0
+
+
+def test_scheduler_batch_full_fast_path():
+    s = sched(TenantQoS(max_batch=8, max_wait_s=100.0))
+    for _ in range(3):
+        s.push(req("a", 3, deadline=1000.0))
+    d = s.poll(0.0)  # 9 rows >= max_batch: fire immediately
+    assert d.reason == "batch_full"
+    # whole requests only: 3 + 3 fit in 8, the third would overflow
+    assert [r.rows for r in d.batch] == [3, 3]
+    assert s.pending_requests() == 1
+    # leftover alone is below every trigger again
+    assert s.poll(0.0).reason == ""
+
+
+def test_scheduler_oversized_request_fires_alone():
+    s = sched(TenantQoS(max_batch=8, max_wait_s=100.0))
+    s.push(req("a", 20, deadline=1000.0))
+    d = s.poll(0.0)
+    assert d.reason == "batch_full" and [r.rows for r in d.batch] == [20]
+
+
+def test_scheduler_max_wait_bounds_staleness():
+    s = sched(TenantQoS(max_batch=10**6, max_wait_s=0.5))
+    s.push(req("a", 1, deadline=1000.0, now=0.0))
+    d = s.poll(0.3)
+    assert d.reason == "" and d.next_wake == pytest.approx(0.5)
+    d = s.poll(0.5)
+    assert d.reason == "max_wait" and len(d.batch) == 1
+
+
+def test_scheduler_sheds_expired_requests():
+    s = sched(LAZY)
+    r = req("a", 2, deadline=1.0)
+    s.push(r)
+    d = s.poll(1.5)
+    assert d.expired == [r] and not d.batch
+    assert s.pending_requests() == 0
+
+
+def test_scheduler_tenant_isolation_under_backlog():
+    """A's giant backlog cannot starve B past its deadline, and A's
+    contribution to any launch stays capped at its max_batch."""
+    qos = {"a": TenantQoS(max_batch=4, max_wait_s=100.0),
+           "b": TenantQoS(max_batch=4, max_wait_s=100.0)}
+    s = DeadlineScheduler(qos.__getitem__, safety_margin_s=1e-3)
+    for _ in range(10):
+        s.push(req("a", 4, deadline=1000.0))
+    rb = req("b", 1, deadline=0.05)
+    s.push(rb)
+    d = s.poll(0.049)  # B's fire time (deadline - margin), before expiry
+    assert d.reason in ("deadline", "batch_full")
+    assert rb in d.batch
+    assert sum(r.rows for r in d.batch if r.tenant_id == "a") <= 4
+    # backlog remains queued, not dropped
+    assert s.queue_rows() == 9 * 4
+
+
+def test_scheduler_latency_ewma_moves_fire_time():
+    s = sched(LAZY, latency_est_s=0.0, latency_ewma=0.5)
+    s.observe_latency(0.2)
+    assert s.latency_est_s == pytest.approx(0.1)
+    s.push(req("a", 1, deadline=1.0))
+    assert s.poll(0.0).next_wake == pytest.approx(0.9)
+
+
+# ---------------------------------------------------------------------------
+# AsyncCircuitServer, manual pump under a fake clock
+# ---------------------------------------------------------------------------
+
+@pytest.fixture
+def registry():
+    reg = CircuitRegistry()
+    for i, shape in enumerate(TENANT_SHAPES):
+        reg.add(f"t{i}", make_servable(40 + i, *shape))
+    return reg
+
+
+def frontend(registry, clock):
+    # the default safety margin (1 ms) makes the fire time strictly earlier
+    # than the expiry time — the tests pump at deadline - margin
+    fe = AsyncCircuitServer(CircuitServer(registry), clock=clock)
+    assert fe.scheduler.safety_margin_s == pytest.approx(1e-3)
+    return fe
+
+
+def test_frontend_serves_at_deadline_and_matches_predict(registry):
+    clock = FakeClock()
+    for tenant in registry:  # isolate the deadline trigger
+        registry.set_qos(tenant, LAZY)
+    fe = frontend(registry, clock)
+    futs = {}
+    for tenant in registry:
+        n_feats = registry.get(tenant).encoder.n_features
+        x = RNG.randn(6, n_feats).astype(np.float32)
+        futs[tenant] = (fe.enqueue(tenant, x, deadline_s=1.0), x)
+    d = fe.pump()
+    assert not d.batch and d.next_wake == pytest.approx(0.999)
+    clock.t = 0.999
+    d = fe.pump()
+    assert d.reason == "deadline" and len(d.batch) == len(futs)
+    for tenant, (fut, x) in futs.items():
+        np.testing.assert_array_equal(
+            fut.result(0), registry.get(tenant).predict(x)
+        )
+    rep = fe.stats.report()
+    assert rep["miss_rate"] == 0.0 and rep["fires"] == 1
+    assert rep["completed"] == len(futs)
+
+
+def test_frontend_admission_rejects_passed_deadline(registry):
+    clock = FakeClock(5.0)
+    fe = frontend(registry, clock)
+    x = RNG.randn(2, 4).astype(np.float32)
+    with pytest.raises(AdmissionError):
+        fe.enqueue("t0", x, deadline=5.0)  # == now: cannot be met
+    with pytest.raises(AdmissionError):
+        fe.enqueue("t0", x, deadline_s=-1.0)
+    assert fe.stats.rejected == 2 and fe.stats.submitted == 0
+    # unknown tenant / wrong width are turned away at the door too
+    with pytest.raises(KeyError):
+        fe.enqueue("nope", x)
+    with pytest.raises(ValueError):
+        fe.enqueue("t0", RNG.randn(2, 99).astype(np.float32))
+
+
+def test_frontend_sheds_expired_and_fails_future(registry):
+    clock = FakeClock()
+    fe = frontend(registry, clock)
+    fut = fe.enqueue("t0", RNG.randn(3, 4).astype(np.float32),
+                     deadline_s=0.5)
+    clock.t = 2.0
+    d = fe.pump()
+    assert len(d.expired) == 1 and not d.batch
+    with pytest.raises(DeadlineExceededError):
+        fut.result(0)
+    rep = fe.stats.report()
+    assert rep["shed"] == 1 and rep["deadline_misses"] == 1
+    assert rep["miss_rate"] == 1.0
+
+
+def test_frontend_batch_full_fires_without_waiting(registry):
+    clock = FakeClock()
+    registry.set_qos("t0", TenantQoS(max_batch=8, max_wait_s=100.0,
+                                     default_deadline_s=100.0))
+    fe = frontend(registry, clock)
+    x = RNG.randn(8, 4).astype(np.float32)
+    fut = fe.enqueue("t0", x)  # rows == max_batch
+    d = fe.pump()  # clock never advanced: fires on fill alone
+    assert d.reason == "batch_full"
+    np.testing.assert_array_equal(fut.result(0),
+                                  registry.get("t0").predict(x))
+    assert fe.stats.report()["mean_batch_fill"] == pytest.approx(1.0)
+
+
+def test_frontend_tenant_isolation_end_to_end(registry):
+    """Backlogged t0 is served in max_batch slices; t1's tight-deadline
+    request rides the deadline-triggered launch and lands on time."""
+    clock = FakeClock()
+    registry.set_qos("t0", TenantQoS(max_batch=4, max_wait_s=100.0,
+                                     default_deadline_s=100.0))
+    fe = frontend(registry, clock)
+    backlog = [
+        (fe.enqueue("t0", x), x)
+        for x in (RNG.randn(4, 4).astype(np.float32) for _ in range(5))
+    ]
+    xb = RNG.randn(2, 7).astype(np.float32)
+    fb = fe.enqueue("t1", xb, deadline_s=0.05)
+    clock.t = 0.049  # t1's fire time
+    d = fe.pump()
+    assert any(r.tenant_id == "t1" for r in d.batch)
+    assert sum(r.rows for r in d.batch if r.tenant_id == "t0") <= 4
+    np.testing.assert_array_equal(fb.result(0),
+                                  registry.get("t1").predict(xb))
+    assert clock() <= 0.05  # fake clock: served strictly within deadline
+    # drain the backlog: every queued t0 request still completes correctly
+    for _ in range(10):
+        if not fe.scheduler.pending_requests():
+            break
+        fe.pump()
+    for fut, x in backlog:
+        np.testing.assert_array_equal(fut.result(0),
+                                      registry.get("t0").predict(x))
+
+
+def test_frontend_hot_remove_fails_queued_requests_individually(registry):
+    clock = FakeClock()
+    fe = frontend(registry, clock)
+    x0 = RNG.randn(3, 4).astype(np.float32)
+    f_live = fe.enqueue("t0", x0, deadline_s=1.0)
+    f_dead = fe.enqueue("t1", RNG.randn(2, 7).astype(np.float32),
+                        deadline_s=1.0)
+    registry.remove("t1")
+    clock.t = 0.999
+    fe.pump()
+    np.testing.assert_array_equal(f_live.result(0),
+                                  registry.get("t0").predict(x0))
+    with pytest.raises(KeyError, match="t1"):
+        f_dead.result(0)
+
+
+def test_frontend_zero_row_request_completes(registry):
+    clock = FakeClock()
+    fe = frontend(registry, clock)
+    fut = fe.enqueue("t0", np.zeros((0, 4), np.float32), deadline_s=1.0)
+    clock.t = 0.999
+    fe.pump()
+    assert fut.result(0).shape == (0,)
+
+
+def test_frontend_stop_drains_pending(registry):
+    fe = AsyncCircuitServer(CircuitServer(registry))
+    x = RNG.randn(3, 4).astype(np.float32)
+    fut = fe.enqueue("t0", x, deadline_s=3600.0)  # nowhere near due
+    fe.stop()  # never started: drain path only
+    np.testing.assert_array_equal(fut.result(0),
+                                  registry.get("t0").predict(x))
+
+
+def test_frontend_failed_launch_fails_its_futures(registry, monkeypatch):
+    """A launch that blows up must fail that batch's futures — never
+    strand them (or kill the background scheduler thread)."""
+    clock = FakeClock()
+    fe = frontend(registry, clock)
+    boom = RuntimeError("backend exploded")
+    monkeypatch.setattr(fe.server, "step",
+                        lambda work: (_ for _ in ()).throw(boom))
+    fut = fe.enqueue("t0", RNG.randn(2, 4).astype(np.float32),
+                     deadline_s=0.5)
+    clock.t = 0.499
+    with pytest.raises(RuntimeError, match="backend exploded"):
+        fe.pump()
+    assert fut.exception(0) is boom
+
+
+def test_server_step_hook_isolates_per_item_errors(registry):
+    server = CircuitServer(registry)
+    x = RNG.randn(4, 4).astype(np.float32)
+    out = server.step([("t0", x), ("nope", x)])
+    np.testing.assert_array_equal(out[0], registry.get("t0").predict(x))
+    assert isinstance(out[1], KeyError)
+    assert server.stats.launches == 1
+
+
+# ---------------------------------------------------------------------------
+# QoS plumbing
+# ---------------------------------------------------------------------------
+
+def test_registry_qos_lifecycle(registry):
+    assert registry.qos("t0") == DEFAULT_QOS
+    tight = TenantQoS(max_batch=8, max_wait_s=0.001, default_deadline_s=0.01)
+    gen = registry.generation
+    registry.set_qos("t0", tight)
+    assert registry.qos("t0") == tight
+    assert registry.generation == gen  # QoS never recompiles the kernel
+    registry.remove("t0")
+    with pytest.raises(KeyError):
+        registry.qos("t0")
+    registry.add("t0", make_servable(40, *TENANT_SHAPES[0]), qos=tight)
+    assert registry.qos("t0") == tight
+    with pytest.raises(ValueError):
+        TenantQoS(max_batch=0)
+    with pytest.raises(ValueError):
+        TenantQoS(default_deadline_s=0.0)
+
+
+# ---------------------------------------------------------------------------
+# Real time: background thread and asyncio facade (parity only, no timing)
+# ---------------------------------------------------------------------------
+
+def test_frontend_background_thread_parity(registry):
+    with AsyncCircuitServer(CircuitServer(registry)) as fe:
+        futs = {}
+        for tenant in registry:
+            n_feats = registry.get(tenant).encoder.n_features
+            x = RNG.randn(5, n_feats).astype(np.float32)
+            futs[tenant] = (fe.enqueue(tenant, x, deadline_s=30.0), x)
+        for tenant, (fut, x) in futs.items():
+            np.testing.assert_array_equal(
+                fut.result(30), registry.get(tenant).predict(x)
+            )
+    assert fe.stats.report()["completed"] == len(futs)
+
+
+def test_servable_serve_async_asyncio_facade():
+    sc = make_servable(77, *TENANT_SHAPES[0])
+    x = RNG.randn(6, TENANT_SHAPES[0][0]).astype(np.float32)
+
+    async def main():
+        async with sc.serve_async() as fe:
+            ids = await fe.submit("default", x, deadline_s=30.0)
+            more = await asyncio.gather(
+                fe.submit("default", x[:2], deadline_s=30.0),
+                fe.submit("default", x[2:], deadline_s=30.0),
+            )
+            return ids, more
+
+    ids, more = asyncio.run(main())
+    np.testing.assert_array_equal(ids, sc.predict(x))
+    np.testing.assert_array_equal(np.concatenate(more),
+                                  sc.predict(x))
