@@ -1,11 +1,22 @@
-"""Validate serving benchmark output and publish BENCH trajectory files.
+"""Validate serving benchmark output and gate the BENCH trajectory.
 
-CI runs the serving benchmarks, then this checker: it reads each named
-result from ``experiments/results/<name>.json``, fails loudly if the file
-is missing, malformed, empty, or lacking the keys the trajectory tracks,
-and copies it to the repo root under its ``BENCH_*.json`` trajectory name
-(what the workflow uploads as an artifact).  A benchmark that silently
-emitted nothing fails the job here instead of uploading an empty file.
+CI runs the serving benchmarks, then this checker.  Two jobs:
+
+  1. **Validate**: read each named result from
+     ``experiments/results/<name>.json``, fail loudly if the file is
+     missing, malformed, empty, or lacking the keys the trajectory
+     tracks.  A benchmark that silently emitted nothing fails the job
+     here instead of uploading an empty file.
+  2. **Gate**: compare each per-backend record's QPS against the
+     committed repo-root baseline (``BENCH_*.json`` from the last merged
+     PR) and fail on a regression beyond the tolerance (default 30%,
+     override with ``CHECK_BENCH_MAX_QPS_DROP``; set
+     ``CHECK_BENCH_SKIP_REGRESSION=1`` to validate without gating, e.g.
+     when re-baselining after an intentional trade-off).
+
+Only after both pass is the new result copied over the repo-root
+``BENCH_*.json`` trajectory name (what the workflow uploads as an
+artifact).
 
     python benchmarks/check_bench.py serve_circuits:BENCH_serve.json \
         serve_async:BENCH_serve_async.json
@@ -29,9 +40,16 @@ REQUIRED_KEYS = {
                     "p99_latency_ms", "mean_batch_fill", "completed"),
 }
 
+# where each benchmark's throughput number lives in a record
+QPS_GETTERS = {
+    "serve_circuits": lambda rec: rec.get("qps"),
+    "serve_async": lambda rec: rec.get("server", {}).get("qps"),
+}
 
-def check_one(name: str, dest: str) -> str:
-    src = os.path.join(RESULTS_DIR, f"{name}.json")
+DEFAULT_MAX_QPS_DROP = 0.30
+
+
+def _validate(name: str, src: str) -> list:
     if not os.path.exists(src):
         raise SystemExit(f"{name}: no benchmark output at {src}")
     with open(src) as f:
@@ -52,7 +70,75 @@ def check_one(name: str, dest: str) -> str:
             raise SystemExit(
                 f"{name}: result[{i}] is missing trajectory keys {missing}"
             )
+    return payload
+
+
+def _gate_regression(name: str, payload: list, baseline_path: str) -> None:
+    """Fail on >tolerance QPS drop vs the committed baseline, per backend."""
+    if os.environ.get("CHECK_BENCH_SKIP_REGRESSION") == "1":
+        print(f"{name}: regression gate skipped "
+              f"(CHECK_BENCH_SKIP_REGRESSION=1)")
+        return
+    if not os.path.exists(baseline_path):
+        print(f"{name}: no committed baseline at {baseline_path}; "
+              f"seeding trajectory without gating")
+        return
+    try:
+        with open(baseline_path) as f:
+            baseline = {r.get("backend"): r for r in json.load(f)}
+    except (json.JSONDecodeError, AttributeError, TypeError) as e:
+        print(f"{name}: unreadable baseline {baseline_path} ({e}); "
+              f"re-seeding without gating")
+        return
+    tol = float(os.environ.get(
+        "CHECK_BENCH_MAX_QPS_DROP", DEFAULT_MAX_QPS_DROP
+    ))
+    get_qps = QPS_GETTERS.get(name, lambda rec: rec.get("qps"))
+    # a baselined backend vanishing from the new payload is itself a
+    # gate failure — otherwise dropping a --backend flag from the CI
+    # invocation would silently stop gating that backend
+    gone = set(baseline) - {rec.get("backend") for rec in payload}
+    if gone:
+        raise SystemExit(
+            f"{name}: baselined backend(s) {sorted(gone)} missing from "
+            f"the new results; run the benchmark with every baselined "
+            f"backend, or re-baseline with CHECK_BENCH_SKIP_REGRESSION=1"
+        )
+    for rec in payload:
+        be = rec.get("backend")
+        old = baseline.get(be)
+        if old is None:
+            print(f"{name}[{be}]: new backend, no baseline to gate against")
+            continue
+        old_qps, new_qps = get_qps(old), get_qps(rec)
+        if new_qps is None:
+            raise SystemExit(
+                f"{name}[{be}]: new result lacks a comparable QPS value — "
+                f"the regression gate cannot run on it"
+            )
+        if not old_qps:
+            print(f"{name}[{be}]: baseline lacks a QPS value; "
+                  f"seeding without gating")
+            continue
+        drop = (old_qps - new_qps) / old_qps
+        verdict = "OK" if drop <= tol else "REGRESSION"
+        print(f"{name}[{be}]: qps {old_qps} -> {new_qps} "
+              f"({-drop:+.1%} vs baseline, tolerance -{tol:.0%}) {verdict}")
+        if drop > tol:
+            raise SystemExit(
+                f"{name}[{be}]: QPS regressed {drop:.1%} "
+                f"(baseline {old_qps}, got {new_qps}; tolerance {tol:.0%}). "
+                f"If this trade-off is intentional, re-baseline with "
+                f"CHECK_BENCH_SKIP_REGRESSION=1 and commit the new "
+                f"BENCH file."
+            )
+
+
+def check_one(name: str, dest: str) -> str:
+    src = os.path.join(RESULTS_DIR, f"{name}.json")
+    payload = _validate(name, src)
     out = os.path.join(REPO_ROOT, dest)
+    _gate_regression(name, payload, out)
     with open(out, "w") as f:
         json.dump(payload, f, indent=1)
     backends = [r.get("backend") for r in payload]

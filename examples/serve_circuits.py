@@ -31,6 +31,7 @@ from repro.core.api import AutoTinyClassifier
 from repro.core.encoding import EncodingConfig
 from repro.data import load_dataset, train_test_split
 from repro.serve.circuits import BUNDLE_SUFFIX, CircuitRegistry, CircuitServer
+from repro.serve.planning import PlacementPolicy
 
 # tenant name → dataset (heterogeneous widths and class counts)
 TENANTS = ("blood", "iris", "led", "wall-robot")
@@ -103,6 +104,23 @@ def main():
 
     for k, v in server.stats.report().items():
         print(f"  {k:23s} {v}")
+
+    # --- declarative placement: same catalog, sharded plan -------------
+    print("\nsharded serving (same catalog, PlacementPolicy(n_shards=2)) ...")
+    sharded = CircuitServer(registry, policy=PlacementPolicy(n_shards=2))
+    plan = sharded.plan()
+    print(f"  {plan.n_shards} plan shards, hash {plan.content_hash[:12]}…; "
+          "placement: "
+          + ", ".join(f"{t}→s{plan.shard_of(t)}" for t in plan.tenants))
+    sharded_mismatches = 0
+    for name, ds in datasets.items():
+        x = ds.x[:16].astype(np.float32)
+        want = registry.get(name).predict(x)
+        sharded_mismatches += int(
+            not np.array_equal(sharded.predict(name, x), want)
+        )
+    print(f"  sharded vs per-model predict mismatches: {sharded_mismatches}")
+    assert sharded_mismatches == 0
 
     if have:
         return  # pure-restart run: nothing to hot-swap against

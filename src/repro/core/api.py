@@ -260,22 +260,8 @@ class AutoTinyClassifier:
         val_fraction: float = 0.5,
         seed: int = 0,
         backend: "str | runtime.EvalBackend" = "ref",
-        **deprecated,
     ):
-        # one-release shim: AutoTinyClassifier(use_kernel=True) still works,
-        # warns, and routes to the matching registered backend
-        if deprecated:
-            unknown = set(deprecated) - {"use_kernel", "interpret"}
-            if unknown:
-                raise TypeError(
-                    f"AutoTinyClassifier: unexpected arguments {sorted(unknown)}"
-                )
-        self.backend = runtime.resolve_with_deprecated_flags(
-            backend,
-            deprecated.get("use_kernel"),
-            deprecated.get("interpret"),
-            owner="AutoTinyClassifier",
-        )
+        self.backend = runtime.resolve_backend(backend)
         self.fn_set = gates.FUNCTION_SETS[fn_set] if isinstance(fn_set, str) else fn_set
         self.n_gates = n_gates
         self.encodings = tuple(encodings)

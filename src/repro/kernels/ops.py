@@ -1,13 +1,15 @@
 """Backend-dispatching wrappers around circuit evaluation (legacy surface).
 
-Evaluation strategy now lives in the `repro.runtime` backend registry —
+Evaluation strategy lives in the `repro.runtime` backend registry —
 ``"ref"`` (pure-jnp oracle), ``"pallas"`` (TPU kernel, interpret on CPU),
 ``"pallas-gpu"`` (reserved).  New code should resolve a backend once at
 its API boundary (`repro.runtime.resolve_backend`) and call its methods;
-these wrappers remain as the module-level convenience surface and as the
-**one-release deprecation shim** for the retired ``use_kernel`` /
-``interpret`` boolean pair (passing either emits `DeprecationWarning`
-and routes to the matching backend).
+these wrappers remain as the module-level convenience surface.
+
+The one-release ``use_kernel=``/``interpret=`` deprecation shim promised
+in the backend-registry redesign has been **removed**: passing either is
+now a `TypeError`.  Migrate to ``backend="ref" | "pallas"`` or an
+`EvalBackend` instance (``PallasBackend(interpret=...)`` forces a mode).
 """
 from __future__ import annotations
 
@@ -23,13 +25,9 @@ def eval_population(
     x_words: jax.Array,   # u32[I, W]
     *,
     backend: "str | runtime.EvalBackend" = "ref",
-    use_kernel: bool | None = None,    # deprecated → backend=
-    interpret: bool | None = None,     # deprecated → backend=
 ) -> jax.Array:           # u32[P, O, W]
     """Evaluate a population of circuits on a shared packed dataset."""
-    be = runtime.resolve_with_deprecated_flags(
-        backend, use_kernel, interpret, owner="eval_population"
-    )
+    be = runtime.resolve_backend(backend)
     return be.eval_population(opcodes, edge_src, out_src, x_words)
 
 
@@ -43,8 +41,6 @@ def eval_population_spans(
     *,
     span_words: int,
     backend: "str | runtime.EvalBackend" = "ref",
-    use_kernel: bool | None = None,    # deprecated → backend=
-    interpret: bool | None = None,     # deprecated → backend=
 ) -> jax.Array:            # u32[P, O, span_words]
     """Multi-tenant population eval: circuit p reads only its own span of
     ``span_words`` words, with per-circuit input-width masking.
@@ -56,9 +52,7 @@ def eval_population_spans(
     (the serving engine lays spans out back to back); the kernel path
     rejects misaligned concrete offsets rather than truncating them.
     """
-    be = runtime.resolve_with_deprecated_flags(
-        backend, use_kernel, interpret, owner="eval_population_spans"
-    )
+    be = runtime.resolve_backend(backend)
     return be.eval_population_spans(
         opcodes, edge_src, out_src, x_words, word_off, in_width,
         span_words=span_words,
@@ -72,11 +66,7 @@ def eval_circuit(
     x_words,
     *,
     backend: "str | runtime.EvalBackend" = "ref",
-    use_kernel: bool | None = None,    # deprecated → backend=
-    interpret: bool | None = None,     # deprecated → backend=
 ) -> jax.Array:
     """Single-circuit convenience wrapper → u32[O, W]."""
-    be = runtime.resolve_with_deprecated_flags(
-        backend, use_kernel, interpret, owner="eval_circuit"
-    )
+    be = runtime.resolve_backend(backend)
     return be.eval_circuit(opcodes, edge_src, out_src, x_words)

@@ -36,7 +36,6 @@ from repro.runtime.registry import (  # noqa: F401
     register_backend,
     resolve_backend,
 )
-from repro.runtime.compat import resolve_with_deprecated_flags  # noqa: F401
 
 __all__ = [
     "BackendCapabilities",
@@ -50,5 +49,4 @@ __all__ = [
     "get_backend",
     "register_backend",
     "resolve_backend",
-    "resolve_with_deprecated_flags",
 ]

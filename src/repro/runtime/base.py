@@ -100,5 +100,19 @@ class EvalBackend(abc.ABC):
         )
         return out[0]
 
+    def span_alignment(self, requested: int | None = None) -> int:
+        """Resolve a requested word-span alignment against this backend.
+
+        ``None`` means "whatever this backend wants" and returns
+        ``capabilities().word_alignment`` (e.g. 128 so spans stay
+        lane-aligned on native TPU kernels); an explicit int is honoured
+        as given — backends that tolerate unaligned spans (interpret
+        mode, the jnp oracle) serve them, ones that cannot reject the
+        launch.  Plan compilers call this once so every `LaunchPlan`
+        carries an alignment the backend agreed to."""
+        if requested is None:
+            return max(int(self.capabilities().word_alignment), 1)
+        return max(int(requested), 1)
+
     def __repr__(self) -> str:
         return f"<{type(self).__name__} {self.name!r}>"

@@ -58,7 +58,8 @@ class AsyncCircuitServer:
         self.clock = clock
         self.idle_poll_s = float(idle_poll_s)
         self.scheduler = DeadlineScheduler(
-            self._qos_for, latency_est_s=latency_est_s
+            self._qos_for, shard_of=self._shard_of,
+            latency_est_s=latency_est_s,
         )
         self.stats = FrontendStats(backend=server.backend.name)
         self._lock = threading.Lock()
@@ -74,6 +75,22 @@ class AsyncCircuitServer:
             return self.server.registry.qos(tenant)
         except KeyError:
             return DEFAULT_QOS
+
+    def _shard_of(self, tenant: str) -> int:
+        """Compiled-plan shard a tenant's launches ride — the scheduler
+        keys per-shard fire times and latency EWMAs on this, so one
+        shard's backlog cannot miss another shard's deadlines."""
+        return self.server.shard_of(tenant)
+
+    def _launched_shards(self, decision: FireDecision) -> tuple:
+        """Every shard the batch is about to launch on: the fired shards
+        plus any holding an ensemble member of a batch tenant."""
+        shards = set(decision.shards)
+        placement = self.server.plan().placement
+        for req in decision.batch:
+            for ref in placement.get(req.tenant_id, ()):
+                shards.add(ref.shard)
+        return tuple(sorted(shards))
 
     # -- request interface --------------------------------------------
     def enqueue(
@@ -161,6 +178,11 @@ class AsyncCircuitServer:
         if not decision.batch:
             return
         try:
+            # read the placement before the step: this is the plan the
+            # step is about to launch on, and reading it afterwards could
+            # compile a *newer* plan (concurrent registry mutation) whose
+            # compile time would also pollute the latency measurement
+            launched = self._launched_shards(decision)
             outs = self.server.step(
                 [(r.tenant_id, r.features) for r in decision.batch]
             )
@@ -171,10 +193,17 @@ class AsyncCircuitServer:
                 r.future.set_exception(err)
             raise
         done = self.clock()
-        self.scheduler.observe_latency(done - now)
+        # one wall-clock measurement covers every shard that rode this
+        # step — including shards the scheduler did not fire but that
+        # launched anyway because an ensemble tenant in the batch has
+        # members placed there; each folds it into its own EWMA
+        for shard in launched or (0,):
+            self.scheduler.observe_latency(done - now, shard=shard)
         with self._lock:
             self.stats.record_fire(
-                decision.reason, self.scheduler.batch_fill(decision.batch)
+                decision.reason, self.scheduler.batch_fill(decision.batch),
+                shards=launched,
+                reasons=[r for _, r in decision.shard_reasons],
             )
         for req, out in zip(decision.batch, outs):
             self.stats.record_request(

@@ -1,4 +1,4 @@
-"""Deadline-aware tick scheduler: decides *when* the fused launch fires.
+"""Deadline-aware tick scheduler: decides *when* each shard's launch fires.
 
 The synchronous `CircuitServer` serves whatever is pending the moment the
 caller ticks it.  The scheduler inverts that: requests accumulate in
@@ -13,10 +13,13 @@ fire a launch now, or sleep until when?  Three triggers fire a launch:
   * **max_wait** — the oldest queued request has waited its tenant's
     ``max_wait_s``; bounded staleness even with lazy deadlines.
 
-When a launch fires, *every* tenant with queued work rides it (that is
-what the fused spans kernel is for), but each contributes at most its
-``max_batch`` rows — so one tenant's backlog can delay, never displace,
-another tenant's deadline-critical rows.
+Scheduling is **per plan shard**: ``shard_of`` maps tenants to their
+compiled-plan shard, every shard gets its own EWMA launch-latency
+estimate and its own fire decision, and only tenants on *fired* shards
+ride the resulting launch — one shard's backlog can delay its own
+tenants, never another shard's deadlines.  Without a ``shard_of`` (the
+single-shard default) everything lives on shard 0 and the behaviour is
+exactly the old global scheduler.
 
 The scheduler is a pure decision core: no threads, no asyncio, no real
 clock.  Time enters only through ``poll(now)`` / ``push``; tests drive it
@@ -38,22 +41,29 @@ class FireDecision(NamedTuple):
     reason: str              # "deadline" | "batch_full" | "max_wait" | ""
     next_wake: float | None  # absolute time of the next scheduled action
     queue_rows: int          # rows queued at poll time (pre-drain)
+    shards: tuple[int, ...] = ()  # plan shards fired this poll
+    # each fired shard's own trigger ((shard, reason), ...): two shards
+    # can fire in one poll for different reasons
+    shard_reasons: tuple = ()
 
 
 class DeadlineScheduler:
-    """Pure deadline/batching policy over per-tenant request queues."""
+    """Pure per-shard deadline/batching policy over per-tenant queues."""
 
     def __init__(
         self,
         qos_for: Callable[[str], TenantQoS],
         *,
+        shard_of: Callable[[str], int] | None = None,
         latency_est_s: float = 0.0,
         latency_ewma: float = 0.25,
         safety_margin_s: float = 1e-3,
     ):
         self._qos_for = qos_for
+        self._shard_of = shard_of
         self._queues: dict[str, RequestQueue] = {}
-        self.latency_est_s = float(latency_est_s)
+        self._latency_init = float(latency_est_s)
+        self._shard_latency: dict[int, float] = {}
         self.latency_ewma = float(latency_ewma)
         self.safety_margin_s = float(safety_margin_s)
 
@@ -80,54 +90,92 @@ class DeadlineScheduler:
                 batch.extend(q.take(self._qos_for(q.tenant_id).max_batch))
         return batch
 
-    def observe_latency(self, latency_s: float) -> None:
-        """Fold one measured launch latency into the EWMA the deadline
-        trigger subtracts when deciding how early to fire."""
+    # -- latency model -------------------------------------------------
+    def shard(self, tenant: str) -> int:
+        """The shard a tenant's launches ride (0 without a shard map;
+        the plan's own shard_of already maps tenants removed mid-flight
+        to 0, so they still fire and the server fails them per-request).
+        A raising shard map is a programming error and propagates."""
+        if self._shard_of is None:
+            return 0
+        return int(self._shard_of(tenant))
+
+    def latency_est(self, shard: int = 0) -> float:
+        """EWMA launch-latency estimate for one shard (shards start from
+        the constructor seed until they observe their own launches)."""
+        return self._shard_latency.get(shard, self._latency_init)
+
+    @property
+    def latency_est_s(self) -> float:
+        """Legacy scalar view: shard 0's estimate (the only shard in
+        unsharded deployments)."""
+        return self.latency_est(0)
+
+    def observe_latency(self, latency_s: float, shard: int = 0) -> None:
+        """Fold one measured launch latency into the shard's EWMA the
+        deadline trigger subtracts when deciding how early to fire."""
         a = self.latency_ewma
-        self.latency_est_s = (1 - a) * self.latency_est_s + a * latency_s
+        cur = self.latency_est(shard)
+        self._shard_latency[shard] = (1 - a) * cur + a * latency_s
 
     # -- the decision --------------------------------------------------
-    def _fire_time(self, deadline: float) -> float:
-        return deadline - self.latency_est_s - self.safety_margin_s
-
     def poll(self, now: float) -> FireDecision:
-        """Shed expired requests, then fire or report when to wake."""
+        """Shed expired requests, then fire due shards or report when to
+        wake.  Each shard's triggers are evaluated against its own latency
+        estimate; a fired shard drains only its own tenants' queues (each
+        capped at its max_batch), so a backlog on shard A cannot displace
+        or delay shard B's deadline-critical rows."""
         queue_rows = self.queue_rows()
         expired: list[Request] = []
         for q in self._queues.values():
             expired.extend(q.expire(now))
 
-        reason = ""
-        next_wake: float | None = None
-        for tenant, q in self._queues.items():
-            if not len(q):
-                continue
-            qos = self._qos_for(tenant)
-            d = q.earliest_deadline()
-            t_deadline = self._fire_time(d)
-            t_wait = q.oldest_arrival() + qos.max_wait_s
-            if t_deadline <= now:
-                reason = "deadline"
-                break
-            if q.rows() >= qos.max_batch:
-                reason = "batch_full"
-                break
-            if t_wait <= now:
-                reason = "max_wait"
-                break
-            t_next = min(t_deadline, t_wait)
-            next_wake = t_next if next_wake is None else min(next_wake, t_next)
-
-        if not reason:
-            return FireDecision([], expired, "", next_wake, queue_rows)
-
-        batch: list[Request] = []
+        by_shard: dict[int, list[tuple[str, RequestQueue]]] = {}
         for tenant, q in self._queues.items():
             if len(q):
+                by_shard.setdefault(self.shard(tenant), []).append((tenant, q))
+
+        fired: dict[int, str] = {}   # shard → trigger reason
+        next_wake: float | None = None
+        for shard in sorted(by_shard):
+            est = self.latency_est(shard)
+            reason = ""
+            for tenant, q in by_shard[shard]:
+                qos = self._qos_for(tenant)
+                t_deadline = (
+                    q.earliest_deadline() - est - self.safety_margin_s
+                )
+                t_wait = q.oldest_arrival() + qos.max_wait_s
+                if t_deadline <= now:
+                    reason = "deadline"
+                    break
+                if q.rows() >= qos.max_batch:
+                    reason = "batch_full"
+                    break
+                if t_wait <= now:
+                    reason = "max_wait"
+                    break
+                t_next = min(t_deadline, t_wait)
+                next_wake = (t_next if next_wake is None
+                             else min(next_wake, t_next))
+            if reason:
+                fired[shard] = reason
+
+        if not fired:
+            return FireDecision([], expired, "", next_wake, queue_rows, ())
+
+        batch: list[Request] = []
+        for shard in sorted(fired):
+            for tenant, q in by_shard[shard]:
                 batch.extend(q.take(self._qos_for(tenant).max_batch))
-        # leftovers (beyond max_batch) exist: the front-end re-polls right
-        # after a fire, so they get a fresh decision immediately
-        return FireDecision(batch, expired, reason, None, queue_rows)
+        # leftovers (beyond max_batch) and unfired shards exist: the
+        # front-end re-polls right after a fire, so they get a fresh
+        # decision immediately
+        shards = tuple(sorted(fired))
+        return FireDecision(
+            batch, expired, fired[shards[0]], None, queue_rows, shards,
+            tuple((s, fired[s]) for s in shards),
+        )
 
     def batch_fill(self, batch: list[Request]) -> float:
         """Fired rows over the fired tenants' max_batch budget (can top 1.0

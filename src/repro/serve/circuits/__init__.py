@@ -1,14 +1,18 @@
-"""Multi-tenant circuit serving: registry → micro-batcher → fused kernel.
+"""Multi-tenant circuit serving: catalog → compiled plans → fused launches.
 
 The deployable counterpart of the evolution pipeline: many fitted tiny
-classifiers (tenants) share one `eval_population_spans` launch per serving
-tick.  See `registry` (genome padding / hot add-remove), `server` (the
-micro-batching engine) and `metrics` (QPS / latency / occupancy reports).
+classifiers (tenants — optionally k-member voting ensembles) share one
+`eval_population_spans` launch per plan shard per serving tick.  See
+`registry` (the pure catalog: hot add/remove, ensembles, QoS,
+persistence), `repro.serve.planning` (PlacementPolicy → PlanCompiler →
+LaunchPlan shards), `server` (the micro-batching engine executing
+compiled plans) and `metrics` (QPS / latency / occupancy reports).
 """
 from repro.serve.circuits.metrics import FrontendStats, ServerStats, TickReport
 from repro.serve.circuits.registry import (
     BUNDLE_SUFFIX,
     DEFAULT_QOS,
+    ENSEMBLE_SEP,
     CircuitRegistry,
     PopulationPlan,
     TenantQoS,
@@ -18,6 +22,7 @@ from repro.serve.circuits.server import CircuitServer
 __all__ = [
     "BUNDLE_SUFFIX",
     "DEFAULT_QOS",
+    "ENSEMBLE_SEP",
     "CircuitRegistry",
     "CircuitServer",
     "FrontendStats",

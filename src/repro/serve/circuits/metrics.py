@@ -32,13 +32,16 @@ class TickReport:
     """What one micro-batch tick did."""
 
     generation: int        # registry generation served
-    tenants: int           # tenants with pending rows this tick
+    tenants: int           # logical tenants with pending rows this tick
     requests: int          # requests completed
     rows: int              # feature rows predicted
-    launches: int          # fused kernel/oracle launches (0 or 1)
-    span_words: int        # words per tenant span in the fused buffer
+    launches: int          # fused kernel/oracle launches (one per shard
+    #                        with work; 0 on an empty tick)
+    span_words: int        # words per slot span (max across shards)
     latency_s: float       # wall-clock tick duration
-    occupancy: float       # rows / (tenants * span_words * 32)
+    occupancy: float       # rows / (padded slots * span_words * 32)
+    plan_shards: int = 1   # shards in the compiled plan this tick ran
+    max_slots_per_launch: int = 0  # busiest single shard launch (slots)
 
     @property
     def empty(self) -> bool:
@@ -67,9 +70,11 @@ class ServerStats:
         default_factory=_window
     )
     max_tenants_per_launch: int = 0
+    plan_shards: int = 1
 
     def record(self, report: TickReport) -> None:
         self.ticks += 1
+        self.plan_shards = max(self.plan_shards, report.plan_shards)
         # Requests count even on launch-free ticks: zero-row submissions and
         # requests failed by a hot remove still complete this tick.
         self.requests += report.requests
@@ -80,8 +85,12 @@ class ServerStats:
         self.rows += report.rows
         self.tick_latencies_s.append(report.latency_s)
         self.occupancies.append(report.occupancy)
+        # per *launch*, not per tick: a sharded tick's busiest single
+        # launch (falls back to the tick's tenant count for reports that
+        # predate the field)
         self.max_tenants_per_launch = max(
-            self.max_tenants_per_launch, report.tenants
+            self.max_tenants_per_launch,
+            report.max_slots_per_launch or report.tenants,
         )
 
     def report(self) -> dict:
@@ -101,6 +110,7 @@ class ServerStats:
             "p99_tick_ms": round(float(np.percentile(lat, 99)) * 1e3, 3),
             "mean_occupancy": round(float(occ.mean()), 4),
             "max_tenants_per_launch": self.max_tenants_per_launch,
+            "plan_shards": self.plan_shards,
         }
 
 
@@ -123,6 +133,7 @@ class FrontendStats:
     served_late: int = 0       # served, but past the deadline
     fires: int = 0             # scheduler-initiated launches
     fire_reasons: dict = dataclasses.field(default_factory=dict)
+    shard_fires: dict = dataclasses.field(default_factory=dict)
     request_latencies_s: collections.deque = dataclasses.field(
         default_factory=_window
     )
@@ -146,9 +157,21 @@ class FrontendStats:
     def record_rejected(self) -> None:
         self.rejected += 1
 
-    def record_fire(self, reason: str, fill: float) -> None:
+    def record_fire(
+        self,
+        reason: str,
+        fill: float,
+        shards: tuple = (),
+        reasons: "list[str] | None" = None,
+    ) -> None:
+        """One scheduler-initiated launch.  ``reasons`` carries each fired
+        shard's own trigger when shards fired together for different
+        reasons; without it the single ``reason`` is counted once."""
         self.fires += 1
-        self.fire_reasons[reason] = self.fire_reasons.get(reason, 0) + 1
+        for r in (reasons or [reason]):
+            self.fire_reasons[r] = self.fire_reasons.get(r, 0) + 1
+        for s in shards:
+            self.shard_fires[s] = self.shard_fires.get(s, 0) + 1
         self.batch_fills.append(fill)
 
     def record_request(self, latency_s: float, late: bool) -> None:
@@ -173,6 +196,7 @@ class FrontendStats:
             "miss_rate": round(self.deadline_misses / admitted, 4),
             "fires": self.fires,
             "fire_reasons": dict(self.fire_reasons),
+            "shard_fires": {str(k): v for k, v in self.shard_fires.items()},
             "p50_latency_ms": round(float(np.percentile(lat, 50)) * 1e3, 3),
             "p99_latency_ms": round(float(np.percentile(lat, 99)) * 1e3, 3),
             "mean_batch_fill": round(float(fill.mean()), 4),

@@ -1,41 +1,42 @@
-"""Multi-tenant circuit registry: heterogeneous genomes → one population.
+"""Multi-tenant circuit catalog: who is registered, nothing else.
 
-Tenants register fitted `ServableCircuit` artifacts (genome + encoder +
-class map).  The registry pads and index-remaps the heterogeneous genomes
-into the fixed ``(P, n_max)`` tensors `eval_population` /
-`eval_population_spans` expect, so every tenant rides the same fused
-kernel launch:
+`CircuitRegistry` is the serving stack's *catalog*: a thread-safe tenant
+table with hot add/remove, ensemble groups (k member circuits voting
+under one logical tenant), per-tenant QoS, and fleet persistence.  It no
+longer builds launch tensors — placement and stacking are the
+`repro.serve.planning` compiler's job, fed by immutable `catalog()`
+snapshots.  Mutation (add/remove/replace) bumps a monotonic
+``generation`` so plan consumers know exactly when a compiled
+`CompiledPlan` — and any jit cache keyed on its content hash — is stale.
 
-  * input ids ``< I_t`` stay put (tenant bits live in rows ``[0, I_t)`` of
-    the shared ``u32[I_max, W]`` buffer); function-node ids shift by
-    ``I_max - I_t`` so the node table starts after the widest tenant's
-    inputs;
-  * pad nodes are ``BUF`` gates reading id 0 — semantically inert and
-    never tapped;
-  * pad output taps read id 0; the per-tenant ``out_width`` tells the
-    decoder how many output bits are real.
-
-Mutation (add/remove/replace) bumps a monotonic ``generation``; the stacked
-`PopulationPlan` is rebuilt lazily and tagged with the generation it was
-built from, so the serving engine knows exactly when its gathered tensors —
-and any jit cache keyed on their shapes — must be refreshed.
+The legacy ``plan()`` entry point survives one release as a deprecated
+wrapper that compiles a single-shard plan and adapts it to the old
+`PopulationPlan` shape.
 """
 from __future__ import annotations
 
 import dataclasses
 import os
+import re
 import threading
-from typing import Iterator, NamedTuple
+import warnings
+from typing import Iterator, NamedTuple, Sequence
 
 import numpy as np
 
-from repro.core import gates
 from repro.core.api import ServableCircuit
-from repro.core.genome import opcodes as genome_opcodes
 from repro.core.genome import validate_genome
+from repro.serve.planning import Catalog
 
 # filename suffix for per-tenant artifact bundles in a registry directory
 BUNDLE_SUFFIX = ".circuit.npz"
+# filename suffix marking ensemble member bundles: <tenant>@m<idx>.
+# The 'm' keeps the marker out of the plain-digit namespace, so legacy
+# tenant names like 'exp@2' never parse as members; zero-padded indices
+# (never written by save_dir) are excluded so names like 'x@m00' stay
+# plain tenant names.
+ENSEMBLE_SEP = "@m"
+_MEMBER_SUFFIX = re.compile(r"^(.+)@m(0|[1-9]\d*)$")
 
 
 @dataclasses.dataclass(frozen=True)
@@ -43,7 +44,7 @@ class TenantQoS:
     """Per-tenant quality-of-service knobs for the async front-end.
 
     The deadline scheduler reads these live (no registry generation bump —
-    QoS never changes the stacked kernel tensors):
+    QoS never changes the compiled launch tensors):
 
       * ``max_batch`` — rows the scheduler coalesces for this tenant per
         fused launch; a backlogged tenant contributes at most this many
@@ -72,11 +73,11 @@ DEFAULT_QOS = TenantQoS()
 
 
 class PopulationPlan(NamedTuple):
-    """Stacked, kernel-ready view of every registered tenant.
+    """Legacy single-shard stacked view (pre-planning-layer API).
 
-    Immutable snapshot: ``circuits`` carries the exact artifacts the stacked
-    tensors were built from, so a consumer mid-tick never observes a
-    half-updated registry."""
+    Kept one release for consumers of the deprecated
+    `CircuitRegistry.plan()`; new code reads `CompiledPlan` /
+    `LaunchPlan` from `repro.serve.planning` instead."""
 
     tenants: tuple[str, ...]     # slot order; slot i serves tenants[i]
     circuits: tuple[ServableCircuit, ...]  # artifact behind each slot
@@ -100,35 +101,15 @@ class PopulationPlan(NamedTuple):
         return self.tenants.index(tenant)
 
 
-def _pad_genome(
-    sc: ServableCircuit, i_max: int, n_max: int, o_max: int
-) -> tuple[np.ndarray, np.ndarray, np.ndarray]:
-    """Remap one tenant's genome into the (i_max, n_max, o_max) id space."""
-    i_t = sc.spec.n_inputs
-    n_t = sc.spec.n_nodes
-    o_t = sc.spec.n_outputs
-
-    def remap(ids: np.ndarray) -> np.ndarray:
-        return np.where(ids < i_t, ids, ids - i_t + i_max)
-
-    opc = np.full(n_max, gates.BUF_A, np.int32)
-    opc[:n_t] = np.asarray(genome_opcodes(sc.genome, sc.spec), np.int32)
-    edge = np.zeros((n_max, 2), np.int32)
-    edge[:n_t] = remap(np.asarray(sc.genome.edge_src, np.int64))
-    outs = np.zeros(o_max, np.int32)
-    outs[:o_t] = remap(np.asarray(sc.genome.out_src, np.int64))
-    return opc, edge, outs
-
-
 class CircuitRegistry:
-    """Thread-safe tenant table with hot add/remove and lazy plan builds."""
+    """Thread-safe tenant catalog with hot add/remove and ensembles."""
 
     def __init__(self):
         self._lock = threading.Lock()
-        self._entries: dict[str, ServableCircuit] = {}
+        self._entries: dict[str, tuple[ServableCircuit, ...]] = {}
         self._qos: dict[str, TenantQoS] = {}
         self._generation = 0
-        self._plan: PopulationPlan | None = None
+        self._legacy_plan: PopulationPlan | None = None
 
     # -- mutation ------------------------------------------------------
     def add(self, tenant: str, circuit: ServableCircuit,
@@ -137,12 +118,45 @@ class CircuitRegistry:
         Returns the new registry generation.  ``qos`` optionally pins the
         tenant's serving QoS (defaults to `DEFAULT_QOS`; a hot-swap without
         an explicit qos keeps the existing one)."""
-        if not validate_genome(circuit.genome, circuit.spec):
-            raise ValueError(f"tenant {tenant!r}: genome fails validation")
+        return self.add_ensemble(tenant, (circuit,), replace=replace, qos=qos)
+
+    def add_ensemble(
+        self, tenant: str, circuits: Sequence[ServableCircuit],
+        replace: bool = False, qos: TenantQoS | None = None,
+    ) -> int:
+        """Register k member circuits voting under one logical tenant.
+
+        Members may differ in genome, gate count and even encoding
+        strategy, but must agree on the raw feature width (they all see
+        the same float rows) and the class count (their votes share one
+        label space).  At serve time each member evaluates in its own
+        launch slot and the decoded class ids are majority-voted per row
+        (ties toward the lowest class id), so an odd k is the sensible
+        choice.  A plain `add` is the k=1 special case."""
+        members = tuple(circuits)
+        if not members:
+            raise ValueError(f"tenant {tenant!r}: ensemble needs >= 1 member")
+        for i, sc in enumerate(members):
+            if not validate_genome(sc.genome, sc.spec):
+                raise ValueError(
+                    f"tenant {tenant!r}: member {i} genome fails validation"
+                )
+        feats = {sc.encoder.n_features for sc in members}
+        if len(feats) > 1:
+            raise ValueError(
+                f"tenant {tenant!r}: ensemble members disagree on feature "
+                f"width {sorted(feats)}"
+            )
+        classes = {sc.n_classes for sc in members}
+        if len(classes) > 1:
+            raise ValueError(
+                f"tenant {tenant!r}: ensemble members disagree on class "
+                f"count {sorted(classes)}"
+            )
         with self._lock:
             if tenant in self._entries and not replace:
                 raise KeyError(f"tenant {tenant!r} already registered")
-            self._entries[tenant] = circuit
+            self._entries[tenant] = members
             if qos is not None:
                 self._qos[tenant] = qos
             self._generation += 1
@@ -169,7 +183,7 @@ class CircuitRegistry:
     def set_qos(self, tenant: str, qos: TenantQoS) -> None:
         """Re-pin a registered tenant's QoS.  Takes effect on the next
         scheduler poll; does not bump the registry generation (QoS never
-        changes the stacked kernel tensors)."""
+        changes the compiled launch tensors)."""
         with self._lock:
             if tenant not in self._entries:
                 raise KeyError(f"unknown tenant {tenant!r}")
@@ -179,15 +193,20 @@ class CircuitRegistry:
     def save_dir(
         self, path: str, *, validated_backend: str = "ref"
     ) -> list[str]:
-        """Write every tenant's artifact bundle into ``path`` (one
-        ``<tenant>.circuit.npz`` per tenant).  Returns the paths written.
+        """Write every tenant's artifact bundle(s) into ``path``.  Plain
+        tenants save as ``<tenant>.circuit.npz``; ensemble members as
+        ``<tenant>@m<member>.circuit.npz``.  Returns the paths written.
 
         The directory becomes a *snapshot* of the registry: bundles for
         tenants no longer registered are deleted, so a later `load_dir`
         cannot resurrect circuits the operator removed.  Together with
         `load_dir` this is the fleet-restart story: a serving host
         persists its registry, restarts, and re-serves the exact same
-        circuits without refitting anything."""
+        circuits without refitting anything.  Tenant names loaded from
+        legacy directories (including ones containing ``@``) round-trip;
+        only names ending in the reserved ``@m<digits>`` member suffix
+        are rejected, since they could not be told apart from members on
+        the next load."""
         os.makedirs(path, exist_ok=True)
         with self._lock:
             entries = dict(self._entries)
@@ -197,31 +216,79 @@ class CircuitRegistry:
                 raise ValueError(
                     f"tenant name {tenant!r} is not filesystem-safe"
                 )
-        written = [
-            circuit.save(
-                os.path.join(path, tenant + BUNDLE_SUFFIX),
-                validated_backend=validated_backend,
-            )
-            for tenant, circuit in entries.items()
-        ]
+            if _MEMBER_SUFFIX.match(tenant):
+                raise ValueError(
+                    f"tenant name {tenant!r} ends in the reserved "
+                    f"'{ENSEMBLE_SEP}<digits>' ensemble-member suffix"
+                )
+        written = []
+        keep = set()
+        for tenant, members in entries.items():
+            for m, sc in enumerate(members):
+                stem = (tenant if len(members) == 1
+                        else f"{tenant}{ENSEMBLE_SEP}{m}")
+                keep.add(stem)
+                written.append(sc.save(
+                    os.path.join(path, stem + BUNDLE_SUFFIX),
+                    validated_backend=validated_backend,
+                ))
         for fname in os.listdir(path):
             if (fname.endswith(BUNDLE_SUFFIX)
-                    and fname[: -len(BUNDLE_SUFFIX)] not in entries):
+                    and fname[: -len(BUNDLE_SUFFIX)] not in keep):
                 os.remove(os.path.join(path, fname))
         return written
 
     @classmethod
     def load_dir(cls, path: str) -> "CircuitRegistry":
         """Rebuild a registry from a directory of artifact bundles written
-        by `save_dir` — tenant names come from the filenames.  Loaded
-        circuits predict bit-identically to the ones that were saved."""
+        by `save_dir` — tenant names (and ensemble member order) come from
+        the filenames.  Loaded circuits predict bit-identically to the
+        ones that were saved."""
         reg = cls()
-        names = sorted(
-            f for f in os.listdir(path) if f.endswith(BUNDLE_SUFFIX)
-        )
-        for fname in names:
-            tenant = fname[: -len(BUNDLE_SUFFIX)]
-            reg.add(tenant, ServableCircuit.load(os.path.join(path, fname)))
+        # '@m<digits>' is only an ensemble member marker when the files
+        # form a well-formed ensemble (members 0..k-1, k >= 2, no
+        # zero-padding — the only shape save_dir writes); any other stem
+        # is a plain tenant name verbatim, so directories written before
+        # the suffix was reserved (tenants like 'model@v2' or 'exp@2')
+        # restore under their original names.
+        candidates: dict[str, list[tuple[int, str, str]]] = {}
+        grouped: dict[str, list[tuple[str, str]]] = {}  # (stem, path)
+        for fname in sorted(os.listdir(path)):
+            if not fname.endswith(BUNDLE_SUFFIX):
+                continue
+            stem = fname[: -len(BUNDLE_SUFFIX)]
+            full = os.path.join(path, fname)
+            m = _MEMBER_SUFFIX.match(stem)
+            if m:
+                candidates.setdefault(m.group(1), []).append(
+                    (int(m.group(2)), stem, full)
+                )
+            else:
+                grouped[stem] = [(stem, full)]
+        for tenant, found in candidates.items():
+            found.sort()
+            if (tenant not in grouped  # a plain '<tenant>' bundle wins
+                    and len(found) >= 2
+                    and [i for i, _, _ in found] == list(range(len(found)))
+                    and all(s == f"{tenant}{ENSEMBLE_SEP}{i}"
+                            for i, s, _ in found)):  # no zero-padding
+                grouped[tenant] = [(s, p) for _, s, p in found]
+            else:  # legacy plain names that merely look like members —
+                # restore under their original stems, verbatim
+                for _, stem, p in found:
+                    grouped[stem] = [(stem, p)]
+        for tenant, entries in grouped.items():
+            circuits = [ServableCircuit.load(p) for _, p in entries]
+            try:
+                reg.add_ensemble(tenant, circuits)
+            except ValueError:
+                if len(entries) == 1:
+                    raise
+                # a member-shaped group that is not actually a coherent
+                # ensemble (mismatched widths/classes) can only be legacy
+                # plain tenants — restore them individually, verbatim
+                for (stem, _), sc in zip(entries, circuits):
+                    reg.add(stem, sc)
         return reg
 
     # -- queries -------------------------------------------------------
@@ -235,55 +302,84 @@ class CircuitRegistry:
         return iter(tuple(self._entries))
 
     def get(self, tenant: str) -> ServableCircuit:
+        """The tenant's primary (first-registered) member circuit — the
+        one whose encoder defines the tenant's feature width."""
+        return self._entries[tenant][0]
+
+    def members(self, tenant: str) -> tuple[ServableCircuit, ...]:
+        """All member circuits behind one logical tenant (length 1 for
+        plain tenants)."""
         return self._entries[tenant]
 
     @property
     def generation(self) -> int:
         return self._generation
 
-    def plan(self) -> PopulationPlan:
-        """Kernel-ready stacked tensors; rebuilt only when stale."""
-        with self._lock:
-            if self._plan is not None and (
-                self._plan.generation == self._generation
-            ):
-                return self._plan
-            self._plan = self._build_plan()
-            return self._plan
+    def catalog(self) -> Catalog:
+        """Immutable snapshot of the tenant table for plan compilation.
 
-    def _build_plan(self) -> PopulationPlan:
-        tenants = tuple(self._entries)
-        circuits = [self._entries[t] for t in tenants]
-        if not circuits:
-            return PopulationPlan(
-                tenants=(),
-                circuits=(),
+        This is the registry's entire contract with the planning layer:
+        a consumer holding a `Catalog` never observes a half-updated
+        registry, and two snapshots with the same generation are
+        identical."""
+        with self._lock:
+            return Catalog(
+                tenants=tuple(self._entries),
+                members=tuple(self._entries.values()),
+                generation=self._generation,
+            )
+
+    # -- legacy --------------------------------------------------------
+    def plan(self) -> PopulationPlan:
+        """Deprecated: compile plans via `repro.serve.planning` instead.
+
+        One-release adapter: compiles a single-shard plan with the
+        default policy and reshapes it to the old `PopulationPlan`.
+        Ensemble tenants cannot be expressed in the legacy shape."""
+        warnings.warn(
+            "CircuitRegistry.plan() is deprecated and will be removed next "
+            "release; compile plans with repro.serve.planning.PlanCompiler"
+            "(backend, policy).compile(registry.catalog()) instead",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        from repro.serve.planning import PlanCompiler
+
+        with self._lock:
+            if (self._legacy_plan is not None
+                    and self._legacy_plan.generation == self._generation):
+                return self._legacy_plan
+        cat = self.catalog()
+        if any(len(m) != 1 for m in cat.members):
+            raise ValueError(
+                "legacy plan() cannot express ensemble tenants; use "
+                "PlanCompiler.compile(registry.catalog())"
+            )
+        compiled = PlanCompiler("ref").compile(cat)
+        if not compiled.shards:
+            plan = PopulationPlan(
+                tenants=(), circuits=(),
                 opcodes=np.zeros((0, 0), np.int32),
                 edge_src=np.zeros((0, 0, 2), np.int32),
                 out_src=np.zeros((0, 0), np.int32),
                 in_width=np.zeros(0, np.int32),
                 out_width=np.zeros(0, np.int32),
                 n_classes=np.zeros(0, np.int32),
-                generation=self._generation,
+                generation=cat.generation,
             )
-        i_max = max(c.spec.n_inputs for c in circuits)
-        n_max = max(c.spec.n_nodes for c in circuits)
-        o_max = max(c.spec.n_outputs for c in circuits)
-        padded = [_pad_genome(c, i_max, n_max, o_max) for c in circuits]
-        return PopulationPlan(
-            tenants=tenants,
-            circuits=tuple(circuits),
-            opcodes=np.stack([p[0] for p in padded]),
-            edge_src=np.stack([p[1] for p in padded]),
-            out_src=np.stack([p[2] for p in padded]),
-            in_width=np.asarray(
-                [c.spec.n_inputs for c in circuits], np.int32
-            ),
-            out_width=np.asarray(
-                [c.spec.n_outputs for c in circuits], np.int32
-            ),
-            n_classes=np.asarray(
-                [c.n_classes for c in circuits], np.int32
-            ),
-            generation=self._generation,
-        )
+        else:
+            (shard,) = compiled.shards
+            plan = PopulationPlan(
+                tenants=shard.slot_tenants,
+                circuits=shard.circuits,
+                opcodes=shard.opcodes,
+                edge_src=shard.edge_src,
+                out_src=shard.out_src,
+                in_width=shard.in_width,
+                out_width=shard.out_width,
+                n_classes=shard.n_classes,
+                generation=shard.generation,
+            )
+        with self._lock:
+            self._legacy_plan = plan
+        return plan

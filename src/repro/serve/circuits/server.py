@@ -1,21 +1,26 @@
-"""Micro-batching inference engine over the fused population kernel.
+"""Micro-batching inference engine over compiled launch plans.
 
 Request flow (one `tick()`):
 
   1. snapshot every tenant's pending float-feature rows;
-  2. per tenant, run the encode→bit-pack pipeline once over all its pending
-     requests (`encoding.encode_batched` + `pack_bits_rows`);
-  3. fuse all tenants into one padded ``u32[I_max, K·span]`` word buffer —
-     tenant k owns the word span ``[k·span, (k+1)·span)``;
-  4. dispatch a single `eval_population_spans` launch: circuit k evaluates
-     only its own span, with input rows above its true width masked off;
-  5. decode each tenant's live output bits back to class ids and scatter
-     them to the originating requests.
+  2. refresh the compiled plan (the `PlanCompiler` recompiles only when
+     the registry generation moved; device-side tensor copies are cached
+     by shard content hash, so an unchanged shard never re-uploads);
+  3. per tenant, run the encode→bit-pack pipeline once per ensemble
+     member over all its pending requests;
+  4. fuse each plan shard's work into its own padded
+     ``u32[I_max, S·span]`` word buffer — slot k owns the word span
+     ``[k·span, (k+1)·span)`` — and dispatch **one fused
+     `eval_population_spans` launch per shard**, each placed on its own
+     device when the host has several (shards overlap: all launches are
+     dispatched before any output is read back);
+  5. decode each member's live output bits to class ids, majority-vote
+     ensemble members, and scatter results to the originating requests.
 
-The engine is generation-aware: when the registry mutates (hot add/remove),
-the next tick picks up the new `PopulationPlan`, refreshes its device-side
-copy of the stacked genome tensors, and jax recompiles only if the padded
-shapes actually changed.
+Placement is policy, not code: pass a `PlacementPolicy` to shard the
+slot population, align spans to the backend's lane width, or rebalance
+slot assignment — the engine just executes whatever plan the compiler
+produced.
 """
 from __future__ import annotations
 
@@ -23,6 +28,7 @@ import dataclasses
 import threading
 import time
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -30,7 +36,14 @@ from repro import runtime
 from repro.core import encoding as E
 from repro.core.api import decode_predictions
 from repro.serve.circuits.metrics import ServerStats, TickReport
-from repro.serve.circuits.registry import CircuitRegistry, PopulationPlan
+from repro.serve.circuits.registry import CircuitRegistry
+from repro.serve.planning import (
+    CompiledPlan,
+    PlacementPolicy,
+    PlanCompiler,
+    ensemble_vote,
+)
+from repro.sharding import specs
 
 
 @dataclasses.dataclass
@@ -43,13 +56,15 @@ class CircuitServer:
     """Synchronous micro-batching server over a `CircuitRegistry`.
 
     ``submit()`` enqueues rows and returns a ticket; ``tick()`` serves every
-    pending row in one fused launch; ``result()`` collects predictions.
-    ``backend`` names the execution backend from the `repro.runtime`
-    registry (or is an `EvalBackend` instance); it is resolved once here
-    and every tick dispatches through it.  ``span_align`` pads each
-    tenant's word span to a multiple (set 128 on real TPUs so spans stay
-    lane-aligned — see ``backend.capabilities().word_alignment``; the
-    default 1 keeps CPU/interpret ticks tight).
+    pending row in one fused launch per plan shard; ``result()`` collects
+    predictions.  ``backend`` names the execution backend from the
+    `repro.runtime` registry (or is an `EvalBackend` instance); it is
+    resolved once here and every tick dispatches through it.  ``policy``
+    is the declarative placement: shard count, slot assignment, and span
+    alignment (``PlacementPolicy(span_align=None)`` derives lane alignment
+    from ``backend.capabilities().word_alignment`` — use on real TPUs).
+    ``span_align`` is the legacy scalar knob, honoured when no policy is
+    passed.
     """
 
     def __init__(
@@ -57,19 +72,31 @@ class CircuitServer:
         registry: CircuitRegistry,
         *,
         backend: "str | runtime.EvalBackend" = "ref",
-        span_align: int = 1,
+        policy: PlacementPolicy | None = None,
+        span_align: int | None = None,
         stable_shapes: bool = True,
     ):
+        if policy is not None and span_align is not None:
+            raise ValueError(
+                "pass span_align via the policy when using one: "
+                "PlacementPolicy(span_align=...)"
+            )
+        if policy is None:
+            policy = PlacementPolicy(
+                span_align=1 if span_align is None else span_align
+            )
         self.registry = registry
         self.backend = runtime.resolve_backend(backend)
-        self.span_align = max(int(span_align), 1)
-        # pad every launch to the full plan's tenant count (idle slots are
+        self.policy = policy
+        self.compiler = PlanCompiler(self.backend, policy)
+        self.span_align = self.compiler.span_align
+        # pad every launch to its shard's full slot count (idle slots are
         # masked off with in_width=0) so the jitted launch shape depends
-        # only on the span bucket and the registry generation — not on
-        # which subset of tenants happens to be busy.  Without this, a
-        # deadline scheduler driving launches hits a fresh XLA compile
-        # (seconds) whenever a new active-tenant count shows up, which is
-        # exactly when requests are queued against a deadline.
+        # only on the span bucket and the plan content — not on which
+        # subset of tenants happens to be busy.  Without this, a deadline
+        # scheduler driving launches hits a fresh XLA compile (seconds)
+        # whenever a new active-slot count shows up, which is exactly when
+        # requests are queued against a deadline.
         self.stable_shapes = bool(stable_shapes)
         self.stats = ServerStats(backend=self.backend.name)
         self._lock = threading.Lock()
@@ -80,9 +107,18 @@ class CircuitServer:
         self._pending: dict[str, list[_Pending]] = {}
         self._results: dict[int, np.ndarray] = {}
         self._next_ticket = 0
-        # generation-tagged device copy of the stacked plan tensors
-        self._plan: PopulationPlan | None = None
-        self._dev: tuple | None = None
+        # compiled-plan cache (generation-tagged) + device-side tensor
+        # copies keyed by shard content hash
+        self._plan_lock = threading.Lock()
+        self._compiled: CompiledPlan | None = None
+        self._dev: dict[str, tuple] = {}
+        # shard s launches on device s % n (only when the policy shards
+        # and the host actually has multiple devices)
+        self._devices: tuple | None = None
+        if policy.n_shards > 1:
+            mesh = specs.population_mesh(policy.n_shards)
+            if mesh.devices.size > 1:
+                self._devices = tuple(mesh.devices.flat)
 
     def reset_stats(self) -> None:
         """Fresh stats window (keeps the resolved backend tag)."""
@@ -131,7 +167,7 @@ class CircuitServer:
         serving error (bad tenant, hot remove, width mismatch) as an
         Exception instance instead of raising — in input order.  The caller
         owns *when* this fires; the server still owns *how* (encode → fuse
-        → one `eval_population_spans` launch).
+        → one `eval_population_spans` launch per plan shard).
 
         Atomic against concurrent `tick()`/`predict()` on the same server:
         the whole submit→tick→collect sequence holds the serve lock, so
@@ -156,21 +192,66 @@ class CircuitServer:
                 p.x.shape[0] for reqs in self._pending.values() for p in reqs
             )
 
-    # -- the fused tick ------------------------------------------------
-    def _refresh_plan(self) -> tuple[PopulationPlan, tuple]:
-        plan = self.registry.plan()
-        if self._plan is None or plan.generation != self._plan.generation:
-            self._plan = plan
-            self._dev = (
-                jnp.asarray(plan.opcodes),
-                jnp.asarray(plan.edge_src),
-                jnp.asarray(plan.out_src),
-                jnp.asarray(plan.in_width),
-            )
-        return self._plan, self._dev
+    # -- the compiled plan ---------------------------------------------
+    def _device_for(self, shard: int):
+        if self._devices is None:
+            return None
+        return self._devices[shard % len(self._devices)]
 
+    def _refresh_plan(self) -> tuple[CompiledPlan, dict]:
+        """Compiled plan for the current registry generation plus its
+        device-side tensors; uploads are cached by shard content hash, so
+        hot-swapping one tenant re-uploads only the shards it actually
+        changed.  Returns the plan with its own tensor dict (not the live
+        cache) so a concurrent recompile cannot pull tensors out from
+        under a tick in flight.
+
+        The fast path is one int comparison — schedulers call this per
+        poll, so a cache hit must not build a `Catalog` (or take the
+        registry lock).  The snapshot is taken *inside* the plan lock so
+        two racing refreshes cannot install an older catalog's plan over
+        a newer one."""
+        with self._plan_lock:
+            if (self._compiled is not None
+                    and self._compiled.generation
+                    == self.registry.generation):
+                return self._compiled, self._dev
+            cat = self.registry.catalog()
+            compiled = self.compiler.compile(cat)
+            dev: dict[str, tuple] = {}
+            for shard in compiled.shards:
+                cached = self._dev.get(shard.content_hash)
+                if cached is None:
+                    device = self._device_for(shard.shard)
+                    host = (shard.opcodes, shard.edge_src,
+                            shard.out_src, shard.in_width)
+                    # device_put straight from host numpy: one transfer,
+                    # not an upload-to-default + device-to-device copy
+                    cached = tuple(
+                        jnp.asarray(t) if device is None
+                        else jax.device_put(t, device)
+                        for t in host
+                    )
+                dev[shard.content_hash] = cached
+            self._compiled = compiled
+            self._dev = dev  # stale shard tensors are dropped here
+            return compiled, dev
+
+    def shard_of(self, tenant: str) -> int:
+        """Home shard of a tenant under the current compiled plan (what a
+        deadline scheduler keys its per-shard fire times on)."""
+        plan, _ = self._refresh_plan()
+        return plan.shard_of(tenant)
+
+    def plan(self) -> CompiledPlan:
+        """The current compiled plan (compiling if stale) — inspectable:
+        shards, placement, content hashes, span alignment."""
+        plan, _ = self._refresh_plan()
+        return plan
+
+    # -- the fused tick ------------------------------------------------
     def tick(self) -> TickReport:
-        """Serve every pending request in at most one fused launch."""
+        """Serve every pending request in one launch per active shard."""
         with self._serve_lock:
             return self._tick_locked()
 
@@ -185,96 +266,142 @@ class CircuitServer:
             self._pending = {}
         plan, dev = self._refresh_plan()
 
-        # Encode each tenant's pending rows in one vectorized sweep.
-        work = []  # (slot, reqs, bits, offsets)
+        # Encode each tenant's pending rows once per ensemble member.
+        # entries: one logical tenant's tick state; member_ids[m] is filled
+        # in as member m's shard launch decodes.
+        entries = []   # (tenant, reqs, offsets, refs, n_classes, member_ids)
+        shard_work: dict[int, list] = {}  # shard → [(slot, packed, entry, m)]
         n_requests = 0
         for tenant, reqs in batch:
+            n_requests += len(reqs)
+            refs = plan.placement.get(tenant)
             # The tenant may have been removed (or hot-swapped to a
             # different feature width) between submit and tick; fail those
             # requests individually instead of poisoning the whole tick.
-            enc = None
-            if tenant in plan.tenants:
-                enc = plan.circuits[plan.slot(tenant)].encoder
-            if enc is None or any(
-                p.x.shape[1] != enc.n_features for p in reqs
+            members = plan.members(tenant) if refs else ()
+            if not refs or any(
+                p.x.shape[1] != members[0].encoder.n_features for p in reqs
             ):
-                why = ("removed" if enc is None
+                why = ("removed" if not refs
                        else "hot-swapped to a different feature width")
                 err = KeyError(
                     f"tenant {tenant!r} was {why} with requests pending"
                 )
-                n_requests += len(reqs)
                 for p in reqs:
                     self._results[p.ticket] = err
                 continue
-            bits, offsets = E.encode_batched(enc, [p.x for p in reqs])
-            n_requests += len(reqs)
-            if offsets[-1] == 0:  # zero-row requests complete immediately
+            xs = [p.x for p in reqs]
+            n_rows = sum(x.shape[0] for x in xs)
+            if n_rows == 0:  # zero-row requests complete immediately
                 for p in reqs:
                     self._results[p.ticket] = np.zeros(0, np.int64)
                 continue
-            work.append((plan.slot(tenant), reqs, bits, offsets))
+            entry = {
+                "reqs": reqs, "rows": n_rows, "offsets": None,
+                "n_classes": int(members[0].n_classes),
+                "member_ids": [None] * len(refs),
+            }
+            w_t = E.n_words(n_rows)
+            for m, (ref, sc) in enumerate(zip(refs, members)):
+                bits, offsets = E.encode_batched(sc.encoder, xs)
+                entry["offsets"] = offsets
+                packed = E.pack_bits_rows(bits, w_t)
+                shard_work.setdefault(ref.shard, []).append(
+                    (ref.slot, packed, entry, m)
+                )
+            entries.append(entry)
 
-        if not work:
+        if not shard_work:
             report = TickReport(
                 generation=plan.generation, tenants=0, requests=n_requests,
                 rows=0, launches=0, span_words=0,
                 latency_s=time.perf_counter() - t0, occupancy=0.0,
+                plan_shards=plan.n_shards,
             )
             self.stats.record(report)
             return report
 
-        # Fuse: tenant k owns words [k*span, (k+1)*span) of one buffer.
-        # Spans are bucketed to powers of two so jit sees a bounded set of
-        # shapes across ticks instead of recompiling per traffic level.
-        # With stable_shapes the tenant axis is padded to the full plan the
-        # same way: pad slots gather slot 0's genome but carry in_width=0,
-        # so their rows are fully masked and their outputs never read.
-        k_active = len(work)
-        rows = [int(offsets[-1]) for _, _, _, offsets in work]
-        span = max(E.n_words(r) for r in rows)
-        span = 1 << (span - 1).bit_length()
-        span = -(-span // self.span_align) * self.span_align
-        k_pad = plan.n_tenants if self.stable_shapes else k_active
-        i_max = int(plan.in_width.max())
-        x_buf = np.zeros((i_max, k_pad * span), np.uint32)
-        for k, (slot, _, bits, offsets) in enumerate(work):
-            w_t = E.n_words(int(offsets[-1]))
-            packed = E.pack_bits_rows(bits, w_t)
-            x_buf[: packed.shape[0], k * span : k * span + w_t] = packed
+        # Fuse per shard: slot k owns words [k*span, (k+1)*span) of that
+        # shard's buffer.  Spans are bucketed to powers of two (then padded
+        # to the plan's span alignment) so jit sees a bounded set of shapes
+        # across ticks instead of recompiling per traffic level.  With
+        # stable_shapes the slot axis is padded to the shard's full slot
+        # count: pad slots gather slot 0's genome but carry in_width=0, so
+        # their rows are fully masked and their outputs never read.
+        # All shard launches are dispatched before any output is read back
+        # — with per-shard device placement they overlap on the hardware.
+        launches = []  # (shard_idx, span, items, out_device_array)
+        max_span = 0
+        pad_cells = 0
+        for shard_idx in sorted(shard_work):
+            shard = plan.shards[shard_idx]
+            items = shard_work[shard_idx]
+            span = max(E.n_words(e["rows"]) for _, _, e, _ in items)
+            span = 1 << (span - 1).bit_length()
+            span = -(-span // self.span_align) * self.span_align
+            k_active = len(items)
+            k_pad = shard.n_slots if self.stable_shapes else k_active
+            i_max = shard.n_inputs_max
+            x_buf = np.zeros((i_max, k_pad * span), np.uint32)
+            for k, (slot, packed, _, _) in enumerate(items):
+                x_buf[: packed.shape[0],
+                      k * span: k * span + packed.shape[1]] = packed
 
-        slots = np.zeros(k_pad, np.int64)
-        slots[:k_active] = [w[0] for w in work]
-        live = jnp.asarray((np.arange(k_pad) < k_active).astype(np.int32))
-        opc, edge, outs, in_w = dev
-        out = self.backend.eval_population_spans(
-            opc[slots], edge[slots], outs[slots],
-            jnp.asarray(x_buf),
-            jnp.arange(k_pad, dtype=jnp.int32) * span,
-            in_w[slots] * live,
-            span_words=span,
-        )
-        out = np.asarray(out)  # u32[K_pad, O_max, span]
-
-        # Scatter class ids back to the originating requests.
-        for k, (slot, reqs, _, offsets) in enumerate(work):
-            o_t = int(plan.out_width[slot])
-            ids = decode_predictions(
-                out[k, :o_t], int(offsets[-1]), int(plan.n_classes[slot])
+            slots = np.zeros(k_pad, np.int64)
+            slots[:k_active] = [it[0] for it in items]
+            live = (np.arange(k_pad) < k_active).astype(np.int32)
+            opc, edge, outs, in_w = dev[shard.content_hash]
+            device = self._device_for(shard_idx)
+            woff_host = np.arange(k_pad, dtype=np.int32) * span
+            if device is None:
+                x_dev = jnp.asarray(x_buf)
+                live_dev = jnp.asarray(live)
+                woff = jnp.asarray(woff_host)
+            else:  # one transfer per buffer, straight to the shard device
+                x_dev = jax.device_put(x_buf, device)
+                live_dev = jax.device_put(live, device)
+                woff = jax.device_put(woff_host, device)
+            out = self.backend.eval_population_spans(
+                opc[slots], edge[slots], outs[slots],
+                x_dev, woff, in_w[slots] * live_dev,
+                span_words=span,
             )
-            for p, lo, hi in zip(reqs, offsets[:-1], offsets[1:]):
+            launches.append((shard_idx, span, items, out))
+            max_span = max(max_span, span)
+            pad_cells += k_pad * span
+
+        # Read back and decode: member class ids first, then the vote.
+        for shard_idx, span, items, out in launches:
+            shard = plan.shards[shard_idx]
+            out = np.asarray(out)  # u32[K_pad, O_max, span]
+            for k, (slot, _, entry, m) in enumerate(items):
+                o_t = int(shard.out_width[slot])
+                entry["member_ids"][m] = decode_predictions(
+                    out[k, :o_t], entry["rows"], entry["n_classes"]
+                )
+
+        for entry in entries:
+            ids = ensemble_vote(
+                np.stack(entry["member_ids"]), entry["n_classes"]
+            )
+            offsets = entry["offsets"]
+            for p, lo, hi in zip(entry["reqs"], offsets[:-1], offsets[1:]):
                 self._results[p.ticket] = ids[lo:hi]
 
-        total_rows = sum(rows)
+        total_rows = sum(e["rows"] for e in entries)
         report = TickReport(
             generation=plan.generation,
-            tenants=k_active,
+            tenants=len(entries),
             requests=n_requests,
             rows=total_rows,
-            launches=1,
-            span_words=span,
+            launches=len(launches),
+            span_words=max_span,
             latency_s=time.perf_counter() - t0,
-            occupancy=total_rows / (k_pad * span * E.WORD),
+            occupancy=total_rows / (pad_cells * E.WORD),
+            plan_shards=plan.n_shards,
+            max_slots_per_launch=max(
+                len(items) for _, _, items, _ in launches
+            ),
         )
         self.stats.record(report)
         return report

@@ -1,0 +1,35 @@
+"""Launch planning: catalog → compiler → immutable plan shards.
+
+The placement seam of the serving stack.  `repro.serve.circuits` keeps
+the *catalog* (which circuits exist) and the *engine* (how a launch
+executes); this package owns everything in between: a declarative
+`PlacementPolicy` (shard count, span alignment, slot assignment), the
+`PlanCompiler` that combines a `Catalog` snapshot with a policy and a
+backend's capabilities, and the compiled artifacts — `LaunchPlan` shards
+carrying stacked genome tensors and a content hash, tied together by a
+`CompiledPlan` with the tenant → (shard, slot) placement map.
+"""
+from repro.serve.planning.compiler import PlanCompiler
+from repro.serve.planning.plan import (
+    Catalog,
+    CompiledPlan,
+    LaunchPlan,
+    SlotRef,
+    circuit_digest,
+    ensemble_vote,
+    pad_genome,
+)
+from repro.serve.planning.policy import DEFAULT_POLICY, PlacementPolicy
+
+__all__ = [
+    "Catalog",
+    "CompiledPlan",
+    "DEFAULT_POLICY",
+    "LaunchPlan",
+    "PlacementPolicy",
+    "PlanCompiler",
+    "SlotRef",
+    "circuit_digest",
+    "ensemble_vote",
+    "pad_genome",
+]

@@ -1,0 +1,165 @@
+"""PlanCompiler: catalog + policy + backend → immutable launch shards.
+
+The compiler is the one place placement decisions are made.  It expands
+ensemble tenants into member slots, assigns slots to shards per the
+policy, stacks each shard's genomes into kernel-ready tensors (padded to
+that shard's own maxima), resolves the effective span alignment against
+the backend's ``capabilities().word_alignment``, and content-hashes the
+result so consumers can cache by value.  Compilation is pure: same
+catalog, policy and backend always produce byte-identical plans.
+"""
+from __future__ import annotations
+
+import hashlib
+import heapq
+
+import numpy as np
+
+from repro import runtime
+from repro.core.api import ServableCircuit
+from repro.serve.planning.plan import (
+    Catalog,
+    CompiledPlan,
+    LaunchPlan,
+    SlotRef,
+    circuit_digest,
+    pad_genome,
+)
+from repro.serve.planning.policy import DEFAULT_POLICY, PlacementPolicy
+
+
+def _slot_cost(sc: ServableCircuit) -> int:
+    """Per-slot launch cost proxy: signals evaluated per word column."""
+    return sc.spec.n_inputs + sc.spec.n_nodes
+
+
+def _assign(
+    policy: PlacementPolicy, costs: list[int], n_shards: int
+) -> list[int]:
+    """Slot index → shard index, per the policy's assignment strategy."""
+    n = len(costs)
+    if policy.assignment == "round_robin":
+        return [i % n_shards for i in range(n)]
+    if policy.assignment == "contiguous":
+        # catalog order split into n_shards runs, sizes as even as possible
+        per, extra = divmod(n, n_shards)
+        out = []
+        for s in range(n_shards):
+            out.extend([s] * (per + (1 if s < extra else 0)))
+        return out
+    # "balanced": LPT greedy — biggest slots first onto the lightest shard;
+    # ties break on shard index so compilation stays deterministic
+    order = sorted(range(n), key=lambda i: (-costs[i], i))
+    heap = [(0, s) for s in range(n_shards)]
+    heapq.heapify(heap)
+    out = [0] * n
+    for i in order:
+        load, s = heapq.heappop(heap)
+        out[i] = s
+        heapq.heappush(heap, (load + costs[i], s))
+    return out
+
+
+class PlanCompiler:
+    """Compiles `Catalog` snapshots into `CompiledPlan`s under one policy.
+
+    ``backend`` only contributes its capabilities descriptor here (span
+    alignment); the compiler never evaluates anything.  ``span_align`` is
+    the resolved effective alignment every plan from this compiler
+    carries."""
+
+    def __init__(
+        self,
+        backend: "str | runtime.EvalBackend" = "ref",
+        policy: PlacementPolicy = DEFAULT_POLICY,
+    ):
+        self.backend = runtime.resolve_backend(backend)
+        self.policy = policy
+        self.span_align = self.backend.span_alignment(policy.span_align)
+
+    def compile(self, catalog: Catalog) -> CompiledPlan:
+        slots = [
+            (tenant, m, sc)
+            for tenant, members in zip(catalog.tenants, catalog.members)
+            for m, sc in enumerate(members)
+        ]
+        if not slots:
+            return CompiledPlan(
+                shards=(), placement={}, generation=catalog.generation,
+                span_align=self.span_align, content_hash=self._hash([]),
+            )
+        n_shards = min(self.policy.n_shards, len(slots))
+        assignment = _assign(
+            self.policy, [_slot_cost(sc) for _, _, sc in slots], n_shards
+        )
+
+        per_shard: list[list[tuple[str, int, ServableCircuit]]] = [
+            [] for _ in range(n_shards)
+        ]
+        placement: dict[str, list[SlotRef | None]] = {
+            t: [None] * len(ms)
+            for t, ms in zip(catalog.tenants, catalog.members)
+        }
+        for (tenant, m, sc), shard in zip(slots, assignment):
+            placement[tenant][m] = SlotRef(shard, len(per_shard[shard]))
+            per_shard[shard].append((tenant, m, sc))
+
+        shards = tuple(
+            self._build_shard(s, entries, catalog.generation)
+            for s, entries in enumerate(per_shard)
+        )
+        return CompiledPlan(
+            shards=shards,
+            placement={t: tuple(refs) for t, refs in placement.items()},
+            generation=catalog.generation,
+            span_align=self.span_align,
+            content_hash=self._hash([sh.content_hash for sh in shards]),
+        )
+
+    def _build_shard(
+        self,
+        shard: int,
+        entries: list[tuple[str, int, ServableCircuit]],
+        generation: int,
+    ) -> LaunchPlan:
+        circuits = [sc for _, _, sc in entries]
+        i_max = max(c.spec.n_inputs for c in circuits)
+        n_max = max(c.spec.n_nodes for c in circuits)
+        o_max = max(c.spec.n_outputs for c in circuits)
+        padded = [pad_genome(c, i_max, n_max, o_max) for c in circuits]
+
+        def frz(arr: np.ndarray) -> np.ndarray:
+            arr.setflags(write=False)
+            return arr
+
+        return LaunchPlan(
+            shard=shard,
+            slot_tenants=tuple(t for t, _, _ in entries),
+            slot_members=tuple(m for _, m, _ in entries),
+            circuits=tuple(circuits),
+            opcodes=frz(np.stack([p[0] for p in padded])),
+            edge_src=frz(np.stack([p[1] for p in padded])),
+            out_src=frz(np.stack([p[2] for p in padded])),
+            in_width=frz(np.asarray(
+                [c.spec.n_inputs for c in circuits], np.int32)),
+            out_width=frz(np.asarray(
+                [c.spec.n_outputs for c in circuits], np.int32)),
+            n_classes=frz(np.asarray(
+                [c.n_classes for c in circuits], np.int32)),
+            span_align=self.span_align,
+            generation=generation,
+            content_hash=self._hash([
+                (shard, t, m, circuit_digest(sc)) for t, m, sc in entries
+            ]),
+        )
+
+    def _hash(self, parts: list) -> str:
+        """Content address: policy knobs + slot contents, NOT generation —
+        re-adding identical circuits yields the same hash (jit caches keyed
+        on it stay warm), while any content or placement change breaks it."""
+        h = hashlib.sha256()
+        h.update(repr((
+            self.span_align, self.policy.n_shards, self.policy.assignment,
+        )).encode())
+        h.update(repr(parts).encode())
+        return h.hexdigest()

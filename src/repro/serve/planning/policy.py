@@ -1,0 +1,62 @@
+"""PlacementPolicy: the declarative half of launch planning.
+
+A policy says *where* tenant circuits should land — how many plan shards
+the catalog is split over, how slots are assigned to shards, and what
+word-span alignment launches must honour — without saying anything about
+*which* circuits exist (the catalog) or *how* they are evaluated (the
+backend).  `PlanCompiler` combines all three into immutable `LaunchPlan`
+shards; new placement scenarios are new policies, not server rewrites.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+ASSIGNMENTS = ("round_robin", "contiguous", "balanced")
+
+
+@dataclasses.dataclass(frozen=True)
+class PlacementPolicy:
+    """Declarative placement of a circuit catalog onto fused launches.
+
+    ``n_shards`` — how many independent `LaunchPlan` shards the slot
+    population is split over.  Each shard is one fused
+    ``eval_population_spans`` launch per tick; with multiple local
+    devices, shard *s* is dispatched on device ``s % n_devices``
+    (see `sharding.specs.population_mesh`), so shards genuinely run in
+    parallel.  The compiler never builds more shards than slots.
+
+    ``span_align`` — word-span granularity of every launch built from the
+    plan: per-tenant spans are padded up to a multiple of this.  ``None``
+    derives it from the backend (``capabilities().word_alignment`` —
+    e.g. 128 for lane-aligned spans on real TPUs); an explicit int is
+    used as requested (the default 1 keeps CPU/interpret ticks tight).
+
+    ``assignment`` — how slots map to shards:
+
+      * ``"round_robin"`` — slot *i* → shard ``i % n_shards`` (default;
+        deterministic, spreads ensemble members across shards);
+      * ``"contiguous"`` — catalog order split into ``n_shards`` runs
+        (keeps a tenant's ensemble members on as few shards as possible);
+      * ``"balanced"`` — longest-processing-time greedy on per-slot gate
+        cost, so one giant circuit cannot make its shard the straggler.
+    """
+
+    n_shards: int = 1
+    span_align: int | None = 1
+    assignment: str = "round_robin"
+
+    def __post_init__(self):
+        if self.n_shards < 1:
+            raise ValueError(f"n_shards must be >= 1, got {self.n_shards}")
+        if self.span_align is not None and self.span_align < 1:
+            raise ValueError(
+                f"span_align must be None or >= 1, got {self.span_align}"
+            )
+        if self.assignment not in ASSIGNMENTS:
+            raise ValueError(
+                f"assignment must be one of {ASSIGNMENTS}, "
+                f"got {self.assignment!r}"
+            )
+
+
+DEFAULT_POLICY = PlacementPolicy()

@@ -24,6 +24,7 @@ import dataclasses
 import math
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, PartitionSpec as P
 
 
@@ -91,6 +92,21 @@ def maybe_constrain(x: jax.Array, mesh: Mesh, spec: P) -> jax.Array:
             x, jax.sharding.NamedSharding(mesh, spec)
         )
     return x
+
+
+def population_mesh(n_shards: int) -> Mesh:
+    """1-D device mesh for the population (tenant-slot) axis of fused
+    serving launches.
+
+    Serving shards the *population* axis, not weights: each `LaunchPlan`
+    shard is an independent fused launch, so the mesh is just an ordered
+    pick of local devices — shard ``s`` runs on ``devices.flat[s % size]``.
+    Never larger than the shard count or the local device count (a
+    single-device host gets a 1-device mesh and all shards time-share it).
+    """
+    devs = jax.local_devices()
+    n = max(1, min(int(n_shards), len(devs)))
+    return Mesh(np.asarray(devs[:n]), ("population",))
 
 
 # ---------------------------------------------------------------------------

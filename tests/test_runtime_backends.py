@@ -1,6 +1,6 @@
 """Execution-backend registry: resolution, capabilities, the reserved GPU
-slot, the use_kernel/interpret deprecation shim, and the backend parity
-matrix over population / spans / odd row counts."""
+slot, removal of the retired use_kernel/interpret shim, and the backend
+parity matrix over population / spans / odd row counts."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -126,35 +126,26 @@ def test_eval_circuit_parity():
 
 
 # ---------------------------------------------------------------------------
-# Deprecation shim
+# Retired deprecation shim: the one-release use_kernel/interpret grace
+# period is over — the flags are hard errors everywhere now
 # ---------------------------------------------------------------------------
 
-def test_eval_population_use_kernel_warns_and_routes_to_pallas():
+def test_retired_flags_are_rejected_everywhere():
     opc, es, osrc, xw = _problem()
-    with pytest.warns(DeprecationWarning, match="backend="):
-        out = ops.eval_population(opc, es, osrc, xw, use_kernel=True)
-    want = runtime.get_backend("pallas").eval_population(opc, es, osrc, xw)
-    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
-
-
-def test_eval_population_use_kernel_false_warns_and_routes_to_ref():
-    opc, es, osrc, xw = _problem()
-    with pytest.warns(DeprecationWarning):
-        out = ops.eval_population(opc, es, osrc, xw, use_kernel=False)
-    want = runtime.get_backend("ref").eval_population(opc, es, osrc, xw)
-    np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
-
-
-def test_eval_population_spans_shim_warns():
-    opc, es, osrc, _ = _problem(pop=3)
-    xw = jnp.zeros((10, 6), jnp.uint32)
-    woff = jnp.arange(3, dtype=jnp.int32) * 2
-    iw = jnp.full(3, 10, jnp.int32)
-    with pytest.warns(DeprecationWarning):
-        out = ops.eval_population_spans(
-            opc, es, osrc, xw, woff, iw, span_words=2, use_kernel=True
+    with pytest.raises(TypeError):
+        ops.eval_population(opc, es, osrc, xw, use_kernel=True)
+    with pytest.raises(TypeError):
+        ops.eval_circuit(opc[0], es[0], osrc[0], xw, interpret=True)
+    with pytest.raises(TypeError):
+        ops.eval_population_spans(
+            opc, es, osrc, xw,
+            jnp.zeros(opc.shape[0], jnp.int32),
+            jnp.full(opc.shape[0], xw.shape[0], jnp.int32),
+            span_words=xw.shape[1], use_kernel=False,
         )
-    assert out.shape == (3, osrc.shape[1], 2)
+    with pytest.raises(TypeError):
+        AutoTinyClassifier(use_kernel=True)
+    assert not hasattr(runtime, "resolve_with_deprecated_flags")
 
 
 def test_eval_population_default_is_ref_and_silent():
@@ -168,13 +159,6 @@ def test_eval_population_default_is_ref_and_silent():
     np.testing.assert_array_equal(np.asarray(out), np.asarray(want))
 
 
-def test_autotinyclassifier_use_kernel_warns_and_routes():
-    with pytest.warns(DeprecationWarning, match="AutoTinyClassifier"):
-        clf = AutoTinyClassifier(use_kernel=True)
-    assert clf.backend.name == "pallas"
-    assert clf.cfg.backend is clf.backend
-
-
 def test_autotinyclassifier_backend_param_resolves_silently():
     import warnings
 
@@ -182,5 +166,13 @@ def test_autotinyclassifier_backend_param_resolves_silently():
         warnings.simplefilter("error")
         clf = AutoTinyClassifier(backend="ref")
     assert clf.backend.name == "ref"
-    with pytest.raises(TypeError):
-        AutoTinyClassifier(use_kerlen=True)  # typo'd kwargs still rejected
+    assert clf.cfg.backend is clf.backend
+
+
+def test_backend_span_alignment_resolution():
+    ref = runtime.get_backend("ref")
+    pal = runtime.get_backend("pallas")
+    assert ref.span_alignment() == 1
+    assert ref.span_alignment(4) == 4
+    assert pal.span_alignment() == pal.capabilities().word_alignment
+    assert pal.span_alignment(1) == 1  # explicit request is honoured

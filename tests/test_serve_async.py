@@ -134,6 +134,75 @@ def test_scheduler_latency_ewma_moves_fire_time():
 
 
 # ---------------------------------------------------------------------------
+# Per-shard scheduling: one shard's state never leaks into another's
+# ---------------------------------------------------------------------------
+
+SHARD_OF = {"a": 0, "b": 1}.get
+
+
+def test_scheduler_fires_only_the_due_shard():
+    """A deadline on shard 0 fires shard 0's launch; shard 1's queued
+    work stays queued for its own (later) fire time."""
+    s = DeadlineScheduler(lambda t: LAZY, shard_of=SHARD_OF,
+                          safety_margin_s=0.0, latency_est_s=0.1)
+    s.push(req("a", 2, deadline=1.0))
+    s.push(req("b", 3, deadline=5.0))
+    d = s.poll(0.9)  # shard 0's fire time (deadline - est latency)
+    assert d.reason == "deadline" and d.shards == (0,)
+    assert [r.tenant_id for r in d.batch] == ["a"]
+    assert s.queue_rows() == 3  # b untouched
+    d = s.poll(4.9)
+    assert d.shards == (1,) and [r.tenant_id for r in d.batch] == ["b"]
+
+
+def test_scheduler_both_shards_due_fire_together():
+    s = DeadlineScheduler(lambda t: LAZY, shard_of=SHARD_OF,
+                          safety_margin_s=0.0, latency_est_s=0.1)
+    s.push(req("a", 1, deadline=1.0))
+    s.push(req("b", 1, deadline=1.0))
+    d = s.poll(0.9)
+    assert d.shards == (0, 1) and len(d.batch) == 2
+
+
+def test_scheduler_per_shard_latency_estimates():
+    """A slow shard fires earlier for the same deadline; its EWMA never
+    contaminates the fast shard's fire time."""
+    s = DeadlineScheduler(lambda t: LAZY, shard_of=SHARD_OF,
+                          safety_margin_s=0.0, latency_est_s=0.1,
+                          latency_ewma=1.0)
+    s.observe_latency(0.5, shard=1)  # shard 1 launches are slow
+    assert s.latency_est(0) == pytest.approx(0.1)
+    assert s.latency_est(1) == pytest.approx(0.5)
+    s.push(req("a", 1, deadline=2.0))
+    s.push(req("b", 1, deadline=2.0))
+    # shard 1 must fire at 1.5 (deadline - its latency); shard 0 at 1.9
+    d = s.poll(1.4)
+    assert d.reason == "" and d.next_wake == pytest.approx(1.5)
+    d = s.poll(1.5)
+    assert d.shards == (1,) and [r.tenant_id for r in d.batch] == ["b"]
+    d = s.poll(1.6)
+    assert d.reason == "" and d.next_wake == pytest.approx(1.9)
+    d = s.poll(1.9)
+    assert d.shards == (0,)
+
+
+def test_scheduler_shard_backlog_cannot_displace_other_shard():
+    """batch_full pressure on shard 1 fires shard 1 alone — shard 0's
+    tenants are not dragged into a launch ahead of their fire time."""
+    qos = TenantQoS(max_batch=4, max_wait_s=100.0)
+    s = DeadlineScheduler(lambda t: qos, shard_of=SHARD_OF,
+                          safety_margin_s=0.0)
+    s.push(req("a", 1, deadline=1000.0))
+    for _ in range(3):
+        s.push(req("b", 4, deadline=1000.0))
+    d = s.poll(0.0)
+    assert d.reason == "batch_full" and d.shards == (1,)
+    assert all(r.tenant_id == "b" for r in d.batch)
+    assert sum(r.rows for r in d.batch) == 4  # one max_batch slice
+    assert s.queue_rows() == 1 + 8  # a queued, plus b's leftover backlog
+
+
+# ---------------------------------------------------------------------------
 # AsyncCircuitServer, manual pump under a fake clock
 # ---------------------------------------------------------------------------
 
@@ -250,6 +319,64 @@ def test_frontend_tenant_isolation_end_to_end(registry):
     for fut, x in backlog:
         np.testing.assert_array_equal(fut.result(0),
                                       registry.get("t0").predict(x))
+
+
+def test_frontend_sharded_per_shard_fires(registry):
+    """On a sharded server, a due deadline fires only that tenant's shard;
+    the other shard's queued work rides its own later launch."""
+    from repro.serve.planning import PlacementPolicy
+
+    clock = FakeClock()
+    for tenant in registry:
+        registry.set_qos(tenant, LAZY)
+    server = CircuitServer(registry, policy=PlacementPolicy(n_shards=2))
+    fe = AsyncCircuitServer(server, clock=clock)
+    # round-robin placement: t0 → shard 0, t1 → shard 1
+    assert server.shard_of("t0") == 0 and server.shard_of("t1") == 1
+    x0 = RNG.randn(3, 4).astype(np.float32)
+    x1 = RNG.randn(5, 7).astype(np.float32)
+    f0 = fe.enqueue("t0", x0, deadline_s=1.0)
+    f1 = fe.enqueue("t1", x1, deadline_s=5.0)
+    clock.t = 0.999
+    d = fe.pump()
+    assert d.shards == (0,)
+    np.testing.assert_array_equal(f0.result(0),
+                                  registry.get("t0").predict(x0))
+    assert not f1.done() and fe.scheduler.pending_requests() == 1
+    clock.t = 4.999
+    d = fe.pump()
+    assert d.shards == (1,)
+    np.testing.assert_array_equal(f1.result(0),
+                                  registry.get("t1").predict(x1))
+    rep = fe.stats.report()
+    assert rep["shard_fires"] == {"0": 1, "1": 1}
+    assert rep["miss_rate"] == 0.0
+
+
+def test_frontend_ensemble_latency_attributed_to_member_shards(registry):
+    """An ensemble tenant's launch touches every shard holding one of its
+    members; each of those shards' latency EWMAs must observe it, not
+    just the home shard the scheduler fired."""
+    from repro.serve.planning import PlacementPolicy
+
+    from tests.test_serve_circuits import make_servable as mk
+
+    clock = FakeClock()
+    registry.add_ensemble("ens", [mk(500 + i, 5, 2, 30, 2)
+                                  for i in range(2)])
+    server = CircuitServer(registry, policy=PlacementPolicy(n_shards=2))
+    refs = server.plan().placement["ens"]
+    assert {r.shard for r in refs} == {0, 1}  # members straddle shards
+    fe = AsyncCircuitServer(server, clock=clock)
+    fut = fe.enqueue("ens", RNG.randn(4, 5).astype(np.float32),
+                     deadline_s=1.0)
+    clock.t = 0.999
+    d = fe.pump()
+    assert d.shards == (0,)  # scheduler fired the home shard...
+    assert fut.result(0).shape == (4,)
+    # ...but both member shards observed the launch latency
+    assert set(fe.scheduler._shard_latency) == {0, 1}
+    assert fe.stats.report()["shard_fires"] == {"0": 1, "1": 1}
 
 
 def test_frontend_hot_remove_fails_queued_requests_individually(registry):

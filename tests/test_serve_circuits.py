@@ -1,4 +1,4 @@
-"""Multi-tenant circuit serving subsystem (registry + micro-batcher)."""
+"""Multi-tenant circuit serving subsystem (catalog + micro-batcher)."""
 import jax
 import jax.numpy as jnp
 import numpy as np
@@ -11,6 +11,7 @@ from repro.core.genome import CircuitSpec, init_genome, opcodes
 from repro.kernels import ref
 from repro.runtime import get_backend
 from repro.serve.circuits import CircuitRegistry, CircuitServer
+from repro.serve.planning import PlacementPolicy, PlanCompiler, ensemble_vote
 
 RNG = np.random.RandomState(0)
 
@@ -43,23 +44,22 @@ def registry():
 # Registry
 # ---------------------------------------------------------------------------
 
-def test_registry_add_remove_recompile(registry):
+def test_registry_catalog_generation_tracking(registry):
     gen0 = registry.generation
-    plan0 = registry.plan()
-    assert plan0.generation == gen0
-    assert plan0.n_tenants == len(TENANT_SHAPES)
-    # plan is cached until the registry mutates
-    assert registry.plan() is plan0
+    cat0 = registry.catalog()
+    assert cat0.generation == gen0
+    assert cat0.tenants == tuple(f"t{i}" for i in range(len(TENANT_SHAPES)))
+    assert cat0.n_slots == len(TENANT_SHAPES)
 
     registry.add("extra", make_servable(99, 5, 2, 30, 2))
     assert registry.generation == gen0 + 1
-    plan1 = registry.plan()
-    assert plan1 is not plan0 and plan1.n_tenants == plan0.n_tenants + 1
+    cat1 = registry.catalog()
+    assert cat1.n_slots == cat0.n_slots + 1
+    # snapshots are immutable: the earlier one still shows the old world
+    assert cat0.n_slots == len(TENANT_SHAPES)
 
     registry.remove("extra")
-    plan2 = registry.plan()
-    assert plan2.n_tenants == plan0.n_tenants
-    assert plan2.generation == gen0 + 2
+    assert registry.catalog().generation == gen0 + 2
 
     with pytest.raises(KeyError):
         registry.add("t0", make_servable(1, 4, 2, 40, 2))
@@ -67,13 +67,15 @@ def test_registry_add_remove_recompile(registry):
     assert registry.generation == gen0 + 3
 
 
-def test_registry_plan_padding_is_semantically_inert(registry):
+def test_compiled_plan_padding_is_semantically_inert(registry):
     """Padded plan rows evaluate identically to each tenant's own genome."""
-    plan = registry.plan()
-    i_max = plan.n_inputs_max
+    plan = PlanCompiler("ref").compile(registry.catalog())
+    (shard,) = plan.shards
+    i_max = shard.n_inputs_max
     for tenant in registry:
         sc = registry.get(tenant)
-        k = plan.slot(tenant)
+        (ref_slot,) = plan.placement[tenant]
+        k = ref_slot.slot
         bits = RNG.randint(0, 2, (64, sc.spec.n_inputs)).astype(np.uint8)
         w = E.n_words(64)
         # native evaluation in the tenant's own id space
@@ -85,17 +87,38 @@ def test_registry_plan_padding_is_semantically_inert(registry):
         wide = np.zeros((i_max, w), np.uint32)
         wide[: sc.spec.n_inputs] = E.pack_bits_rows(bits, w)
         padded = ref.eval_circuit_packed(
-            jnp.asarray(plan.opcodes[k]), jnp.asarray(plan.edge_src[k]),
-            jnp.asarray(plan.out_src[k]), jnp.asarray(wide),
+            jnp.asarray(shard.opcodes[k]), jnp.asarray(shard.edge_src[k]),
+            jnp.asarray(shard.out_src[k]), jnp.asarray(wide),
         )
         np.testing.assert_array_equal(
             np.asarray(padded)[: sc.spec.n_outputs], np.asarray(native)
         )
 
 
-def test_empty_registry_plan():
-    plan = CircuitRegistry().plan()
-    assert plan.n_tenants == 0 and plan.opcodes.shape[0] == 0
+def test_empty_registry_compiles_to_empty_plan():
+    plan = PlanCompiler("ref").compile(CircuitRegistry().catalog())
+    assert plan.n_shards == 0 and plan.n_slots == 0 and plan.tenants == ()
+
+
+def test_legacy_plan_wrapper_warns_and_matches_compiler(registry):
+    with pytest.warns(DeprecationWarning, match="PlanCompiler"):
+        legacy = registry.plan()
+    compiled = PlanCompiler("ref").compile(registry.catalog())
+    (shard,) = compiled.shards
+    assert legacy.tenants == shard.slot_tenants
+    assert legacy.generation == compiled.generation
+    np.testing.assert_array_equal(legacy.opcodes, shard.opcodes)
+    np.testing.assert_array_equal(legacy.in_width, shard.in_width)
+    # cached until the registry mutates
+    with pytest.warns(DeprecationWarning):
+        assert registry.plan() is legacy
+    # the legacy shape cannot express ensembles
+    registry.add_ensemble(
+        "ens", [make_servable(7 + i, 4, 2, 30, 2) for i in range(3)]
+    )
+    with pytest.warns(DeprecationWarning):
+        with pytest.raises(ValueError, match="ensemble"):
+            registry.plan()
 
 
 # ---------------------------------------------------------------------------
@@ -276,3 +299,56 @@ def test_server_stats_report(registry):
     assert rep["launches"] == len(TENANT_SHAPES)  # one predict() per tick
     assert rep["p99_tick_ms"] >= rep["p50_tick_ms"] >= 0.0
     assert 0.0 < rep["mean_occupancy"] <= 1.0
+    assert rep["plan_shards"] == 1
+
+
+# ---------------------------------------------------------------------------
+# Sharded and ensemble serving
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("n_shards", [2, 3])
+def test_server_sharded_matches_single_shard(registry, n_shards):
+    """One launch per shard, predictions identical to the unsharded path."""
+    server = CircuitServer(
+        registry, policy=PlacementPolicy(n_shards=n_shards)
+    )
+    tickets = {}
+    for i, tenant in enumerate(registry):
+        n_feats = registry.get(tenant).encoder.n_features
+        x = RNG.randn(4 + 11 * i, n_feats).astype(np.float32)
+        tickets[tenant] = (server.submit(tenant, x), x)
+    report = server.tick()
+    assert report.plan_shards == n_shards
+    assert 1 < report.launches <= n_shards
+    for tenant, (ticket, x) in tickets.items():
+        np.testing.assert_array_equal(
+            server.result(ticket), registry.get(tenant).predict(x)
+        )
+
+
+def test_server_ensemble_majority_vote(registry):
+    """A 3-member ensemble tenant serves the member-wise majority vote."""
+    members = [make_servable(200 + i, 5, 2, 40, 3) for i in range(3)]
+    registry.add_ensemble("ens", members)
+    server = CircuitServer(registry)
+    x = RNG.randn(37, 5).astype(np.float32)
+    got = server.predict("ens", x)
+    votes = np.stack([m.predict(x) for m in members])
+    np.testing.assert_array_equal(got, ensemble_vote(votes, 3))
+    # plain tenants in the same tick are unaffected
+    x0 = RNG.randn(9, 4).astype(np.float32)
+    np.testing.assert_array_equal(
+        server.predict("t0", x0), registry.get("t0").predict(x0)
+    )
+
+
+def test_registry_rejects_inconsistent_ensembles():
+    reg = CircuitRegistry()
+    with pytest.raises(ValueError, match=">= 1"):
+        reg.add_ensemble("e", [])
+    with pytest.raises(ValueError, match="feature width"):
+        reg.add_ensemble("e", [make_servable(0, 4, 2, 30, 2),
+                               make_servable(1, 5, 2, 30, 2)])
+    with pytest.raises(ValueError, match="class count"):
+        reg.add_ensemble("e", [make_servable(0, 4, 2, 30, 2),
+                               make_servable(1, 4, 2, 30, 3)])
