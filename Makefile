@@ -1,8 +1,9 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test lint dev-deps bench-serve bench-async check-bench \
-        example-serve example-quickstart example-async smoke
+.PHONY: test soak-churn lint dev-deps bench-serve bench-async \
+        bench-autoscale check-bench example-serve example-quickstart \
+        example-async smoke
 
 dev-deps:
 	$(PYTHON) -m pip install -r requirements-dev.txt
@@ -10,6 +11,13 @@ dev-deps:
 # Tier-1 verification (ROADMAP.md)
 test:
 	$(PYTHON) -m pytest -x -q
+
+# churn-soak: autoscale + async suites on a faked 8-device host with an
+# extended soak window, so plan swaps cross real device boundaries
+soak-churn:
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 SOAK_CHURN=1 \
+	  $(PYTHON) -m pytest -x -q tests/test_autoscale.py \
+	  tests/test_serve_async.py tests/test_planning.py
 
 lint:
 	$(PYTHON) -m ruff check .
@@ -20,10 +28,14 @@ bench-serve:
 bench-async:
 	$(PYTHON) benchmarks/serve_async.py
 
+bench-autoscale:
+	$(PYTHON) benchmarks/serve_autoscale.py
+
 # validate benchmark output + publish repo-root BENCH_*.json (CI gate)
 check-bench:
 	$(PYTHON) benchmarks/check_bench.py \
-	  serve_circuits:BENCH_serve.json serve_async:BENCH_serve_async.json
+	  serve_circuits:BENCH_serve.json serve_async:BENCH_serve_async.json \
+	  serve_autoscale:BENCH_serve_autoscale.json
 
 example-serve:
 	$(PYTHON) examples/serve_circuits.py

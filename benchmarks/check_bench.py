@@ -9,10 +9,15 @@ CI runs the serving benchmarks, then this checker.  Two jobs:
      here instead of uploading an empty file.
   2. **Gate**: compare each per-backend record's QPS against the
      committed repo-root baseline (``BENCH_*.json`` from the last merged
-     PR) and fail on a regression beyond the tolerance (default 30%,
-     override with ``CHECK_BENCH_MAX_QPS_DROP``; set
+     PR) and fail on a regression beyond the tolerance.  Tolerances
+     resolve per benchmark: ``CHECK_BENCH_MAX_QPS_DROP_<NAME>`` (name
+     upper-cased, e.g. ``CHECK_BENCH_MAX_QPS_DROP_SERVE_AUTOSCALE``)
+     beats the global ``CHECK_BENCH_MAX_QPS_DROP``, which beats the
+     per-benchmark default in ``DEFAULT_TOLERANCES``, which beats the
+     global 30% — so one noisy benchmark can run with a wider gate
+     without loosening the stable ones.  Set
      ``CHECK_BENCH_SKIP_REGRESSION=1`` to validate without gating, e.g.
-     when re-baselining after an intentional trade-off).
+     when re-baselining after an intentional trade-off.
 
 Only after both pass is the new result copied over the repo-root
 ``BENCH_*.json`` trajectory name (what the workflow uploads as an
@@ -38,15 +43,33 @@ REQUIRED_KEYS = {
                        "mean_occupancy", "parity_mismatches"),
     "serve_async": ("backend", "miss_rate", "p50_latency_ms",
                     "p99_latency_ms", "mean_batch_fill", "completed"),
+    "serve_autoscale": ("backend", "qps", "miss_rate", "n_rebalances",
+                        "mean_swap_ms", "shards_reused_frac"),
 }
 
 # where each benchmark's throughput number lives in a record
 QPS_GETTERS = {
     "serve_circuits": lambda rec: rec.get("qps"),
     "serve_async": lambda rec: rec.get("server", {}).get("qps"),
+    "serve_autoscale": lambda rec: rec.get("qps"),
 }
 
 DEFAULT_MAX_QPS_DROP = 0.30
+# per-benchmark tolerance overrides: the autoscale benchmark swaps plans
+# mid-run (jit recompiles, device re-uploads), so its wall-clock QPS is
+# inherently noisier than the steady-state serving benchmarks — widen
+# its gate instead of widening everyone's
+DEFAULT_TOLERANCES = {
+    "serve_autoscale": 0.50,
+}
+
+
+def _tolerance(name: str) -> float:
+    for env in (f"CHECK_BENCH_MAX_QPS_DROP_{name.upper()}",
+                "CHECK_BENCH_MAX_QPS_DROP"):
+        if env in os.environ:
+            return float(os.environ[env])
+    return DEFAULT_TOLERANCES.get(name, DEFAULT_MAX_QPS_DROP)
 
 
 def _validate(name: str, src: str) -> list:
@@ -90,9 +113,7 @@ def _gate_regression(name: str, payload: list, baseline_path: str) -> None:
         print(f"{name}: unreadable baseline {baseline_path} ({e}); "
               f"re-seeding without gating")
         return
-    tol = float(os.environ.get(
-        "CHECK_BENCH_MAX_QPS_DROP", DEFAULT_MAX_QPS_DROP
-    ))
+    tol = _tolerance(name)
     get_qps = QPS_GETTERS.get(name, lambda rec: rec.get("qps"))
     # a baselined backend vanishing from the new payload is itself a
     # gate failure — otherwise dropping a --backend flag from the CI

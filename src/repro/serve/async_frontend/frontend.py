@@ -82,6 +82,15 @@ class AsyncCircuitServer:
         shard's backlog cannot miss another shard's deadlines."""
         return self.server.shard_of(tenant)
 
+    def rebind_shards(self, carry: "dict[int, int]", n_shards: int) -> None:
+        """Carry the scheduler's per-shard latency EWMAs across a plan
+        swap (see `DeadlineScheduler.rebind_shards`) — called by the
+        autoscale controller right after `CircuitServer.swap_plan`, under
+        the front-end lock so a concurrent poll sees either the old or
+        the new estimates, never a mix."""
+        with self._lock:
+            self.scheduler.rebind_shards(carry, n_shards)
+
     def _launched_shards(self, decision: FireDecision) -> tuple:
         """Every shard the batch is about to launch on: the fired shards
         plus any holding an ensemble member of a batch tenant."""

@@ -118,6 +118,28 @@ class DeadlineScheduler:
         cur = self.latency_est(shard)
         self._shard_latency[shard] = (1 - a) * cur + a * latency_s
 
+    def rebind_shards(self, carry: "dict[int, int]", n_shards: int) -> None:
+        """Re-key the per-shard latency EWMAs across a plan swap.
+
+        ``carry[new_shard] = old_shard`` names the pre-swap shard whose
+        launches most resemble the new shard's (the one that contributed
+        most of its slots).  Each new shard inherits its ancestor's
+        estimate; a shard with no ancestor (or an unobserved one) seeds
+        from the mean of the known estimates, so a freshly grown shard
+        does not cold-start at zero and fire too late.  Estimates for
+        shards beyond the new plan are dropped.  Fire times need no
+        rebind — they are recomputed from queue state every poll."""
+        old = self._shard_latency
+        seed = sum(old.values()) / len(old) if old else None
+        fresh: dict[int, float] = {}
+        for s in range(n_shards):
+            src = carry.get(s)
+            if src is not None and src in old:
+                fresh[s] = old[src]
+            elif seed is not None:
+                fresh[s] = seed
+        self._shard_latency = fresh
+
     # -- the decision --------------------------------------------------
     def poll(self, now: float) -> FireDecision:
         """Shed expired requests, then fire due shards or report when to

@@ -1,0 +1,28 @@
+"""Plan-aware autoscaling: online shard rebalancing from live telemetry.
+
+PR 4 made placement a compiled artifact (`repro.serve.planning`); this
+package makes it a *moving* one.  An `AutoscaleController` windows the
+serving stack's own telemetry (per-shard occupancy, scheduler latency
+EWMAs, deadline misses), a pluggable `AutoscalePolicy` decides when the
+layout no longer fits the traffic, and the controller installs an
+incrementally recompiled plan through the server's generation-fenced
+`swap_plan` — in-flight launches finish on the old plan, queued requests
+land on the new one, and content-hash caching keeps unchanged shards'
+device uploads warm across the swap.
+"""
+from repro.serve.autoscale.controller import AutoscaleController, carry_map
+from repro.serve.autoscale.policy import (
+    AutoscaleDecision,
+    AutoscalePolicy,
+    HysteresisPolicy,
+    ShardTelemetry,
+)
+
+__all__ = [
+    "AutoscaleController",
+    "AutoscaleDecision",
+    "AutoscalePolicy",
+    "HysteresisPolicy",
+    "ShardTelemetry",
+    "carry_map",
+]

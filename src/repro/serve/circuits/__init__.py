@@ -6,18 +6,24 @@ classifiers (tenants — optionally k-member voting ensembles) share one
 `registry` (the pure catalog: hot add/remove, ensembles, QoS,
 persistence), `repro.serve.planning` (PlacementPolicy → PlanCompiler →
 LaunchPlan shards), `server` (the micro-batching engine executing
-compiled plans) and `metrics` (QPS / latency / occupancy reports).
+compiled plans, with the generation-fenced `swap_plan` hook
+`repro.serve.autoscale` drives) and `metrics` (QPS / latency /
+occupancy / rebalance reports).
 """
-from repro.serve.circuits.metrics import FrontendStats, ServerStats, TickReport
+from repro.serve.circuits.metrics import (
+    FrontendStats,
+    RebalanceEvent,
+    ServerStats,
+    TickReport,
+)
 from repro.serve.circuits.registry import (
     BUNDLE_SUFFIX,
     DEFAULT_QOS,
     ENSEMBLE_SEP,
     CircuitRegistry,
-    PopulationPlan,
     TenantQoS,
 )
-from repro.serve.circuits.server import CircuitServer
+from repro.serve.circuits.server import CircuitServer, StalePlanError
 
 __all__ = [
     "BUNDLE_SUFFIX",
@@ -26,8 +32,9 @@ __all__ = [
     "CircuitRegistry",
     "CircuitServer",
     "FrontendStats",
-    "PopulationPlan",
+    "RebalanceEvent",
     "ServerStats",
+    "StalePlanError",
     "TenantQoS",
     "TickReport",
 ]

@@ -42,10 +42,39 @@ class TickReport:
     occupancy: float       # rows / (padded slots * span_words * 32)
     plan_shards: int = 1   # shards in the compiled plan this tick ran
     max_slots_per_launch: int = 0  # busiest single shard launch (slots)
+    # per-launch (shard, slot-rows, padded bit-lanes) — slot-rows counts
+    # each ensemble member's rows once per slot it occupies, i.e. the
+    # lanes that actually carried data in that shard's launch
+    shard_stats: tuple = ()
+    tenant_rows: tuple = ()  # per-tenant (name, rows) served this tick
 
     @property
     def empty(self) -> bool:
         return self.rows == 0
+
+
+@dataclasses.dataclass(frozen=True)
+class RebalanceEvent:
+    """One generation-fenced plan swap (the autoscale hot-swap record).
+
+    ``shards_reused`` counts new-plan shards whose device tensors were
+    satisfied by the content-hash cache (unchanged shards are never
+    re-uploaded); ``shards_rebuilt`` counts the ones that uploaded fresh
+    tensors.  ``inflight_requests`` is how many requests were queued on
+    the server across the swap — they land on the new plan at their next
+    tick, none are lost."""
+
+    action: str            # "grow" | "shrink" | "rebalance" | "swap"
+    reason: str            # the policy's human-readable trigger
+    generation: int        # catalog generation the new plan serves
+    from_shards: int
+    to_shards: int
+    shards_reused: int
+    shards_rebuilt: int
+    inflight_requests: int
+    swap_ms: float         # wall-clock install latency (fence → plan live)
+    prev_hash: str         # content hash of the plan swapped out
+    plan_hash: str         # content hash of the plan swapped in
 
 
 @dataclasses.dataclass
@@ -71,6 +100,12 @@ class ServerStats:
     )
     max_tenants_per_launch: int = 0
     plan_shards: int = 1
+    # cumulative per-shard lane accounting (occupancy telemetry the
+    # autoscale controller windows by delta) and per-tenant rows served
+    shard_rows: dict = dataclasses.field(default_factory=dict)
+    shard_cells: dict = dataclasses.field(default_factory=dict)
+    tenant_rows: dict = dataclasses.field(default_factory=dict)
+    rebalances: list = dataclasses.field(default_factory=list)
 
     def record(self, report: TickReport) -> None:
         self.ticks += 1
@@ -85,6 +120,11 @@ class ServerStats:
         self.rows += report.rows
         self.tick_latencies_s.append(report.latency_s)
         self.occupancies.append(report.occupancy)
+        for shard, rows, cells in report.shard_stats:
+            self.shard_rows[shard] = self.shard_rows.get(shard, 0) + rows
+            self.shard_cells[shard] = self.shard_cells.get(shard, 0) + cells
+        for tenant, rows in report.tenant_rows:
+            self.tenant_rows[tenant] = self.tenant_rows.get(tenant, 0) + rows
         # per *launch*, not per tick: a sharded tick's busiest single
         # launch (falls back to the tick's tenant count for reports that
         # predate the field)
@@ -92,6 +132,9 @@ class ServerStats:
             self.max_tenants_per_launch,
             report.max_slots_per_launch or report.tenants,
         )
+
+    def record_rebalance(self, event: RebalanceEvent) -> None:
+        self.rebalances.append(event)
 
     def report(self) -> dict:
         elapsed = time.perf_counter() - self.started_at
@@ -111,6 +154,23 @@ class ServerStats:
             "mean_occupancy": round(float(occ.mean()), 4),
             "max_tenants_per_launch": self.max_tenants_per_launch,
             "plan_shards": self.plan_shards,
+            "shard_occupancy": {
+                str(s): round(
+                    self.shard_rows.get(s, 0)
+                    / max(self.shard_cells.get(s, 1), 1), 4,
+                )
+                for s in sorted(self.shard_cells)
+            },
+            "n_rebalances": len(self.rebalances),
+            "mean_swap_ms": round(
+                sum(e.swap_ms for e in self.rebalances)
+                / max(len(self.rebalances), 1), 3,
+            ),
+            "shards_reused_frac": round(
+                sum(e.shards_reused for e in self.rebalances)
+                / max(sum(e.shards_reused + e.shards_rebuilt
+                          for e in self.rebalances), 1), 4,
+            ),
         }
 
 

@@ -9,9 +9,9 @@ snapshots.  Mutation (add/remove/replace) bumps a monotonic
 ``generation`` so plan consumers know exactly when a compiled
 `CompiledPlan` — and any jit cache keyed on its content hash — is stale.
 
-The legacy ``plan()`` entry point survives one release as a deprecated
-wrapper that compiles a single-shard plan and adapts it to the old
-`PopulationPlan` shape.
+(The pre-planning-layer ``plan()``/`PopulationPlan` API served out its
+one-release deprecation grace in PR 4 and is gone; compile plans with
+``PlanCompiler(backend, policy).compile(registry.catalog())``.)
 """
 from __future__ import annotations
 
@@ -19,10 +19,7 @@ import dataclasses
 import os
 import re
 import threading
-import warnings
-from typing import Iterator, NamedTuple, Sequence
-
-import numpy as np
+from typing import Iterator, Sequence
 
 from repro.core.api import ServableCircuit
 from repro.core.genome import validate_genome
@@ -72,35 +69,6 @@ class TenantQoS:
 DEFAULT_QOS = TenantQoS()
 
 
-class PopulationPlan(NamedTuple):
-    """Legacy single-shard stacked view (pre-planning-layer API).
-
-    Kept one release for consumers of the deprecated
-    `CircuitRegistry.plan()`; new code reads `CompiledPlan` /
-    `LaunchPlan` from `repro.serve.planning` instead."""
-
-    tenants: tuple[str, ...]     # slot order; slot i serves tenants[i]
-    circuits: tuple[ServableCircuit, ...]  # artifact behind each slot
-    opcodes: np.ndarray          # i32[P, n_max] raw gate opcodes
-    edge_src: np.ndarray         # i32[P, n_max, 2] remapped operand ids
-    out_src: np.ndarray          # i32[P, O_max] remapped output taps
-    in_width: np.ndarray         # i32[P] live input bits per tenant
-    out_width: np.ndarray        # i32[P] live output bits per tenant
-    n_classes: np.ndarray        # i32[P]
-    generation: int              # registry generation this plan was built at
-
-    @property
-    def n_tenants(self) -> int:
-        return len(self.tenants)
-
-    @property
-    def n_inputs_max(self) -> int:
-        return 0 if self.opcodes.size == 0 else int(self.in_width.max())
-
-    def slot(self, tenant: str) -> int:
-        return self.tenants.index(tenant)
-
-
 class CircuitRegistry:
     """Thread-safe tenant catalog with hot add/remove and ensembles."""
 
@@ -109,7 +77,6 @@ class CircuitRegistry:
         self._entries: dict[str, tuple[ServableCircuit, ...]] = {}
         self._qos: dict[str, TenantQoS] = {}
         self._generation = 0
-        self._legacy_plan: PopulationPlan | None = None
 
     # -- mutation ------------------------------------------------------
     def add(self, tenant: str, circuit: ServableCircuit,
@@ -328,58 +295,3 @@ class CircuitRegistry:
                 members=tuple(self._entries.values()),
                 generation=self._generation,
             )
-
-    # -- legacy --------------------------------------------------------
-    def plan(self) -> PopulationPlan:
-        """Deprecated: compile plans via `repro.serve.planning` instead.
-
-        One-release adapter: compiles a single-shard plan with the
-        default policy and reshapes it to the old `PopulationPlan`.
-        Ensemble tenants cannot be expressed in the legacy shape."""
-        warnings.warn(
-            "CircuitRegistry.plan() is deprecated and will be removed next "
-            "release; compile plans with repro.serve.planning.PlanCompiler"
-            "(backend, policy).compile(registry.catalog()) instead",
-            DeprecationWarning,
-            stacklevel=2,
-        )
-        from repro.serve.planning import PlanCompiler
-
-        with self._lock:
-            if (self._legacy_plan is not None
-                    and self._legacy_plan.generation == self._generation):
-                return self._legacy_plan
-        cat = self.catalog()
-        if any(len(m) != 1 for m in cat.members):
-            raise ValueError(
-                "legacy plan() cannot express ensemble tenants; use "
-                "PlanCompiler.compile(registry.catalog())"
-            )
-        compiled = PlanCompiler("ref").compile(cat)
-        if not compiled.shards:
-            plan = PopulationPlan(
-                tenants=(), circuits=(),
-                opcodes=np.zeros((0, 0), np.int32),
-                edge_src=np.zeros((0, 0, 2), np.int32),
-                out_src=np.zeros((0, 0), np.int32),
-                in_width=np.zeros(0, np.int32),
-                out_width=np.zeros(0, np.int32),
-                n_classes=np.zeros(0, np.int32),
-                generation=cat.generation,
-            )
-        else:
-            (shard,) = compiled.shards
-            plan = PopulationPlan(
-                tenants=shard.slot_tenants,
-                circuits=shard.circuits,
-                opcodes=shard.opcodes,
-                edge_src=shard.edge_src,
-                out_src=shard.out_src,
-                in_width=shard.in_width,
-                out_width=shard.out_width,
-                n_classes=shard.n_classes,
-                generation=shard.generation,
-            )
-        with self._lock:
-            self._legacy_plan = plan
-        return plan

@@ -35,7 +35,7 @@ import numpy as np
 from repro import runtime
 from repro.core import encoding as E
 from repro.core.api import decode_predictions
-from repro.serve.circuits.metrics import ServerStats, TickReport
+from repro.serve.circuits.metrics import RebalanceEvent, ServerStats, TickReport
 from repro.serve.circuits.registry import CircuitRegistry
 from repro.serve.planning import (
     CompiledPlan,
@@ -44,6 +44,12 @@ from repro.serve.planning import (
     ensemble_vote,
 )
 from repro.sharding import specs
+
+
+class StalePlanError(RuntimeError):
+    """A plan offered to `CircuitServer.swap_plan` was compiled from a
+    catalog generation the registry has since moved past — the caller
+    must re-snapshot the catalog and recompile."""
 
 
 @dataclasses.dataclass
@@ -114,11 +120,15 @@ class CircuitServer:
         self._dev: dict[str, tuple] = {}
         # shard s launches on device s % n (only when the policy shards
         # and the host actually has multiple devices)
-        self._devices: tuple | None = None
+        self._devices = self._shard_devices(policy)
+
+    @staticmethod
+    def _shard_devices(policy: PlacementPolicy) -> "tuple | None":
         if policy.n_shards > 1:
             mesh = specs.population_mesh(policy.n_shards)
             if mesh.devices.size > 1:
-                self._devices = tuple(mesh.devices.flat)
+                return tuple(mesh.devices.flat)
+        return None
 
     def reset_stats(self) -> None:
         """Fresh stats window (keeps the resolved backend tag)."""
@@ -198,13 +208,15 @@ class CircuitServer:
             return None
         return self._devices[shard % len(self._devices)]
 
-    def _refresh_plan(self) -> tuple[CompiledPlan, dict]:
+    def _refresh_plan(self) -> tuple[CompiledPlan, dict, "tuple | None"]:
         """Compiled plan for the current registry generation plus its
-        device-side tensors; uploads are cached by shard content hash, so
-        hot-swapping one tenant re-uploads only the shards it actually
-        changed.  Returns the plan with its own tensor dict (not the live
-        cache) so a concurrent recompile cannot pull tensors out from
-        under a tick in flight.
+        device-side tensors and the device list it was placed on;
+        uploads are cached by shard content hash, so hot-swapping one
+        tenant re-uploads only the shards it actually changed.  Returns
+        the plan with its own tensor dict and device snapshot (not the
+        live attributes) so a concurrent recompile *or plan swap* cannot
+        pull tensors — or re-point device placement — out from under a
+        tick in flight.
 
         The fast path is one int comparison — schedulers call this per
         poll, so a cache hit must not build a `Catalog` (or take the
@@ -215,39 +227,126 @@ class CircuitServer:
             if (self._compiled is not None
                     and self._compiled.generation
                     == self.registry.generation):
-                return self._compiled, self._dev
+                return self._compiled, self._dev, self._devices
             cat = self.registry.catalog()
-            compiled = self.compiler.compile(cat)
+            # incremental once a plan exists: unchanged tenants keep their
+            # shard and slot order, so only the shards a mutation actually
+            # touched change content hash (and re-upload / re-jit)
+            compiled = self.compiler.recompile(cat, self._compiled)
+            dev: dict[str, tuple] = {}
+            for shard in compiled.shards:
+                dev[shard.content_hash] = (
+                    self._dev.get(shard.content_hash)
+                    or self._upload_shard(shard)
+                )
+            self._compiled = compiled
+            self._dev = dev  # stale shard tensors are dropped here
+            return compiled, dev, self._devices
+
+    def _upload_shard(self, shard) -> tuple:
+        device = self._device_for(shard.shard)
+        host = (shard.opcodes, shard.edge_src,
+                shard.out_src, shard.in_width)
+        # device_put straight from host numpy: one transfer, not an
+        # upload-to-default + device-to-device copy
+        return tuple(
+            jnp.asarray(t) if device is None
+            else jax.device_put(t, device)
+            for t in host
+        )
+
+    def swap_plan(
+        self,
+        compiled: CompiledPlan,
+        *,
+        compiler: PlanCompiler | None = None,
+        action: str = "swap",
+        reason: str = "",
+    ) -> RebalanceEvent:
+        """Generation-fenced atomic plan swap — the autoscaling hook.
+
+        Installs an externally compiled plan (e.g. a rebalanced or
+        grown/shrunk one from `PlanCompiler.recompile`) in place of the
+        server's own.  The fence: the plan must have been compiled from
+        the registry's *current* generation, else `StalePlanError` —
+        the caller re-snapshots the catalog and recompiles, so a swap
+        can never roll back a concurrent registry mutation.
+
+        The swap is atomic against serving: a tick in flight keeps its
+        own immutable plan snapshot and device-tensor dict to the end;
+        requests queued across the swap land on the new plan at their
+        next tick.  Device uploads are satisfied from the content-hash
+        cache, so unchanged shards are never re-uploaded (`RebalanceEvent
+        .shards_reused` counts them).  ``compiler`` (when given) becomes
+        the server's compiler, so the swapped policy — shard count,
+        assignment — also governs future generation-triggered refreshes.
+        """
+        t0 = time.perf_counter()
+        with self._plan_lock:
+            if compiled.generation != self.registry.generation:
+                raise StalePlanError(
+                    f"plan compiled at generation {compiled.generation}, "
+                    f"registry is at {self.registry.generation}"
+                )
+            prev = self._compiled
+            if compiler is not None:
+                self.compiler = compiler
+                self.policy = compiler.policy
+                self.span_align = compiler.span_align
+                self._devices = self._shard_devices(compiler.policy)
+            reused = rebuilt = 0
             dev: dict[str, tuple] = {}
             for shard in compiled.shards:
                 cached = self._dev.get(shard.content_hash)
                 if cached is None:
-                    device = self._device_for(shard.shard)
-                    host = (shard.opcodes, shard.edge_src,
-                            shard.out_src, shard.in_width)
-                    # device_put straight from host numpy: one transfer,
-                    # not an upload-to-default + device-to-device copy
-                    cached = tuple(
-                        jnp.asarray(t) if device is None
-                        else jax.device_put(t, device)
-                        for t in host
-                    )
+                    rebuilt += 1
+                    cached = self._upload_shard(shard)
+                else:
+                    reused += 1
                 dev[shard.content_hash] = cached
             self._compiled = compiled
-            self._dev = dev  # stale shard tensors are dropped here
-            return compiled, dev
+            self._dev = dev
+            with self._lock:
+                inflight = sum(
+                    len(reqs) for reqs in self._pending.values()
+                )
+        event = RebalanceEvent(
+            action=action,
+            reason=reason,
+            generation=compiled.generation,
+            from_shards=prev.n_shards if prev is not None else 0,
+            to_shards=compiled.n_shards,
+            shards_reused=reused,
+            shards_rebuilt=rebuilt,
+            inflight_requests=inflight,
+            swap_ms=(time.perf_counter() - t0) * 1e3,
+            prev_hash=prev.content_hash if prev is not None else "",
+            plan_hash=compiled.content_hash,
+        )
+        self.stats.record_rebalance(event)
+        return event
 
     def shard_of(self, tenant: str) -> int:
         """Home shard of a tenant under the current compiled plan (what a
         deadline scheduler keys its per-shard fire times on)."""
-        plan, _ = self._refresh_plan()
+        plan, _, _ = self._refresh_plan()
         return plan.shard_of(tenant)
 
     def plan(self) -> CompiledPlan:
         """The current compiled plan (compiling if stale) — inspectable:
         shards, placement, content hashes, span alignment."""
-        plan, _ = self._refresh_plan()
+        plan, _, _ = self._refresh_plan()
         return plan
+
+    def peek_plan(self) -> CompiledPlan | None:
+        """The last installed plan without compiling — possibly stale,
+        possibly None on a never-ticked server.  What an autoscaler
+        feeds `PlanCompiler.recompile` as the stickiness hint: a stale
+        previous plan only costs placement quality, never correctness,
+        and peeking avoids compiling a plan that is about to be
+        replaced anyway."""
+        with self._plan_lock:
+            return self._compiled
 
     # -- the fused tick ------------------------------------------------
     def tick(self) -> TickReport:
@@ -264,7 +363,16 @@ class CircuitServer:
         with self._lock:
             batch = [(t, reqs) for t, reqs in self._pending.items() if reqs]
             self._pending = {}
-        plan, dev = self._refresh_plan()
+        # plan, tensors, devices and span alignment are one consistent
+        # snapshot: a concurrent swap_plan re-points the live attributes,
+        # but this tick launches entirely on what it read here
+        plan, dev, devices = self._refresh_plan()
+        span_align = plan.span_align if plan.shards else self.span_align
+
+        def device_for(shard: int):
+            if devices is None:
+                return None
+            return devices[shard % len(devices)]
 
         # Encode each tenant's pending rows once per ensemble member.
         # entries: one logical tenant's tick state; member_ids[m] is filled
@@ -297,6 +405,7 @@ class CircuitServer:
                     self._results[p.ticket] = np.zeros(0, np.int64)
                 continue
             entry = {
+                "tenant": tenant,
                 "reqs": reqs, "rows": n_rows, "offsets": None,
                 "n_classes": int(members[0].n_classes),
                 "member_ids": [None] * len(refs),
@@ -333,12 +442,13 @@ class CircuitServer:
         launches = []  # (shard_idx, span, items, out_device_array)
         max_span = 0
         pad_cells = 0
+        shard_stats = []  # per launch: (shard, slot-rows, padded bit-lanes)
         for shard_idx in sorted(shard_work):
             shard = plan.shards[shard_idx]
             items = shard_work[shard_idx]
             span = max(E.n_words(e["rows"]) for _, _, e, _ in items)
             span = 1 << (span - 1).bit_length()
-            span = -(-span // self.span_align) * self.span_align
+            span = -(-span // span_align) * span_align
             k_active = len(items)
             k_pad = shard.n_slots if self.stable_shapes else k_active
             i_max = shard.n_inputs_max
@@ -351,7 +461,7 @@ class CircuitServer:
             slots[:k_active] = [it[0] for it in items]
             live = (np.arange(k_pad) < k_active).astype(np.int32)
             opc, edge, outs, in_w = dev[shard.content_hash]
-            device = self._device_for(shard_idx)
+            device = device_for(shard_idx)
             woff_host = np.arange(k_pad, dtype=np.int32) * span
             if device is None:
                 x_dev = jnp.asarray(x_buf)
@@ -369,6 +479,11 @@ class CircuitServer:
             launches.append((shard_idx, span, items, out))
             max_span = max(max_span, span)
             pad_cells += k_pad * span
+            shard_stats.append((
+                shard_idx,
+                sum(it[2]["rows"] for it in items),
+                k_pad * span * E.WORD,
+            ))
 
         # Read back and decode: member class ids first, then the vote.
         for shard_idx, span, items, out in launches:
@@ -401,6 +516,10 @@ class CircuitServer:
             plan_shards=plan.n_shards,
             max_slots_per_launch=max(
                 len(items) for _, _, items, _ in launches
+            ),
+            shard_stats=tuple(shard_stats),
+            tenant_rows=tuple(
+                (e["tenant"], e["rows"]) for e in entries
             ),
         )
         self.stats.record(report)

@@ -116,6 +116,162 @@ class PlanCompiler:
             content_hash=self._hash([sh.content_hash for sh in shards]),
         )
 
+    def recompile(
+        self,
+        catalog: Catalog,
+        prev_plan: "CompiledPlan | None",
+        policy: "PlacementPolicy | None" = None,
+        *,
+        weights: "dict[str, float] | None" = None,
+        max_imbalance: "float | None" = None,
+    ) -> CompiledPlan:
+        """Incremental compile against a previous plan: maximize shard
+        content-hash reuse so an online plan swap re-uploads (and
+        re-jits) only the shards that actually changed.
+
+        Surviving ``(tenant, member)`` slots stay on their previous
+        shard in their previous relative order — a shard none of whose
+        slots changed keeps a byte-identical content hash, and every
+        cache keyed on it (device tensors, jit shapes) stays warm across
+        the swap.  New slots, and slots whose previous shard fell off a
+        shrunk plan, go to the lightest shard (LPT).  Empty shards (a
+        grown plan) always receive work; with ``max_imbalance`` the
+        heaviest shard additionally sheds slots to the lightest until
+        ``max_load <= max_imbalance * mean_load`` — the knob a
+        telemetry-driven rebalance turns.
+
+        ``weights`` replaces the static gate-cost model with observed
+        per-tenant load (e.g. rows served over the controller's window),
+        split evenly across a tenant's ensemble members — what a load
+        rebalance actually wants to equalize.  A tenant absent from the
+        mapping weighs zero (it served nothing in the window): mixing
+        observed rows with gate-count fallbacks would compare
+        incomparable units and migrate the wrong slots.  ``policy``
+        overrides this compiler's policy for the new plan (how an
+        autoscaler grows/shrinks ``n_shards`` without mutating the
+        compiler the server still holds).
+        """
+        if policy is not None and policy != self.policy:
+            return PlanCompiler(self.backend, policy).recompile(
+                catalog, prev_plan,
+                weights=weights, max_imbalance=max_imbalance,
+            )
+        slots = [
+            (tenant, m, sc)
+            for tenant, members in zip(catalog.tenants, catalog.members)
+            for m, sc in enumerate(members)
+        ]
+        if not slots or prev_plan is None or not prev_plan.shards:
+            return self.compile(catalog)
+        n_shards = min(self.policy.n_shards, len(slots))
+
+        n_members = {t: len(ms)
+                     for t, ms in zip(catalog.tenants, catalog.members)}
+
+        def cost(tenant: str, sc: ServableCircuit) -> float:
+            if weights is not None:
+                w = weights.get(tenant)
+                return (max(float(w), 0.0) / n_members[tenant]
+                        if w is not None else 0.0)
+            return float(_slot_cost(sc))
+
+        costs = [cost(t, sc) for t, _, sc in slots]
+        prev_ref: dict[tuple[str, int], SlotRef] = {
+            (t, m): r
+            for t, refs in prev_plan.placement.items()
+            for m, r in enumerate(refs)
+            if r is not None
+        }
+
+        # sticky pass: surviving slots keep their shard and relative order
+        per_shard: list[list[int]] = [[] for _ in range(n_shards)]
+        sticky: list[list[tuple[int, int]]] = [[] for _ in range(n_shards)]
+        homeless: list[int] = []
+        for idx, (t, m, _) in enumerate(slots):
+            r = prev_ref.get((t, m))
+            if r is not None and r.shard < n_shards:
+                sticky[r.shard].append((r.slot, idx))
+            else:
+                homeless.append(idx)
+        for s in range(n_shards):
+            per_shard[s] = [idx for _, idx in sorted(sticky[s])]
+        loads = [sum(costs[i] for i in shard) for shard in per_shard]
+
+        # new / orphaned slots: LPT onto the lightest shard
+        for idx in sorted(homeless, key=lambda i: (-costs[i], i)):
+            s = min(range(n_shards), key=lambda s: (loads[s], s))
+            per_shard[s].append(idx)
+            loads[s] += costs[idx]
+
+        def move(hi: int, lo: int, idx: int) -> None:
+            per_shard[hi].remove(idx)
+            per_shard[lo].append(idx)
+            loads[hi] -= costs[idx]
+            loads[lo] += costs[idx]
+
+        def best_pick(hi: int, lo: int) -> int:
+            gap = (loads[hi] - loads[lo]) / 2
+            return min(per_shard[hi],
+                       key=lambda i: (abs(costs[i] - gap), i))
+
+        # feed empty shards (a grown plan): every shard must carry work
+        for _ in range(len(slots)):
+            empties = [s for s in range(n_shards) if not per_shard[s]]
+            donors = [s for s in range(n_shards) if len(per_shard[s]) > 1]
+            if not empties or not donors:
+                break
+            hi = max(donors, key=lambda s: (loads[s], -s))
+            move(hi, empties[0], best_pick(hi, empties[0]))
+
+        # surgical rebalance: ONE donor (the heaviest shard), ONE
+        # recipient (the lightest) — a rebalance swap rebuilds at most
+        # two shards, keeping the rest of the fleet's uploads and jit
+        # shapes warm; if that is not enough, the hysteresis loop fires
+        # again next window
+        if max_imbalance is not None and n_shards > 1:
+            hi = max(range(n_shards), key=lambda s: (loads[s], -s))
+            lo = min(range(n_shards), key=lambda s: (loads[s], s))
+            for _ in range(len(slots)):
+                mean = sum(loads) / n_shards
+                if (hi == lo or len(per_shard[hi]) <= 1
+                        or loads[hi] <= max_imbalance * mean):
+                    break
+                gap = (loads[hi] - loads[lo]) / 2
+                pick = best_pick(hi, lo)
+                # moving cost c narrows the spread iff c < hi − lo; and
+                # a c far below the gap cannot meaningfully fix the
+                # imbalance — it would only churn shard hashes, so stop
+                # rather than shuffle crumbs
+                if not (0.25 * gap <= costs[pick]
+                        < loads[hi] - loads[lo]):
+                    break  # no useful move remains
+                move(hi, lo, pick)
+
+        placement: dict[str, list[SlotRef | None]] = {
+            t: [None] * len(ms)
+            for t, ms in zip(catalog.tenants, catalog.members)
+        }
+        per_shard_entries: list[list[tuple[str, int, ServableCircuit]]] = []
+        for s, shard_slots in enumerate(per_shard):
+            entries = []
+            for idx in shard_slots:
+                t, m, sc = slots[idx]
+                placement[t][m] = SlotRef(s, len(entries))
+                entries.append((t, m, sc))
+            per_shard_entries.append(entries)
+
+        shards = tuple(
+            self._build_shard(s, entries, catalog.generation)
+            for s, entries in enumerate(per_shard_entries)
+        )
+        return CompiledPlan(
+            shards=shards,
+            placement={t: tuple(refs) for t, refs in placement.items()},
+            generation=catalog.generation,
+            span_align=self.span_align,
+            content_hash=self._hash([sh.content_hash for sh in shards]),
+        )
+
     def _build_shard(
         self,
         shard: int,
@@ -148,15 +304,30 @@ class PlanCompiler:
                 [c.n_classes for c in circuits], np.int32)),
             span_align=self.span_align,
             generation=generation,
-            content_hash=self._hash([
-                (shard, t, m, circuit_digest(sc)) for t, m, sc in entries
-            ]),
+            content_hash=self._shard_hash(shard, entries),
         )
 
+    def _shard_hash(
+        self, shard: int, entries: list[tuple[str, int, ServableCircuit]]
+    ) -> str:
+        """Per-shard content address: span alignment, the shard's index
+        (its device binding), and its slot contents in order — and
+        deliberately NOT the policy's ``n_shards``/``assignment`` knobs,
+        so growing the plan or rebalancing *other* shards leaves this
+        shard's hash (and every device upload or jit cache keyed on it)
+        untouched across a swap."""
+        h = hashlib.sha256()
+        h.update(repr((self.span_align, shard)).encode())
+        h.update(repr([
+            (t, m, circuit_digest(sc)) for t, m, sc in entries
+        ]).encode())
+        return h.hexdigest()
+
     def _hash(self, parts: list) -> str:
-        """Content address: policy knobs + slot contents, NOT generation —
-        re-adding identical circuits yields the same hash (jit caches keyed
-        on it stay warm), while any content or placement change breaks it."""
+        """Plan-level content address: policy knobs + shard hashes, NOT
+        generation — re-adding identical circuits yields the same hash
+        (jit caches keyed on it stay warm), while any content or
+        placement change breaks it."""
         h = hashlib.sha256()
         h.update(repr((
             self.span_align, self.policy.n_shards, self.policy.assignment,

@@ -31,7 +31,7 @@ class PlacementPolicy:
     e.g. 128 for lane-aligned spans on real TPUs); an explicit int is
     used as requested (the default 1 keeps CPU/interpret ticks tight).
 
-    ``assignment`` — how slots map to shards:
+    ``assignment`` — how slots map to shards on a *full* compile:
 
       * ``"round_robin"`` — slot *i* → shard ``i % n_shards`` (default;
         deterministic, spreads ensemble members across shards);
@@ -39,6 +39,14 @@ class PlacementPolicy:
         (keeps a tenant's ensemble members on as few shards as possible);
       * ``"balanced"`` — longest-processing-time greedy on per-slot gate
         cost, so one giant circuit cannot make its shard the straggler.
+
+    The strategy shapes the initial layout only: once a plan exists,
+    registry mutations recompile *incrementally*
+    (`PlanCompiler.recompile`) — surviving slots stay put and new slots
+    go to the lightest shard, deliberately trading strict adherence to
+    the strategy for launch-cache reuse (an unchanged shard keeps its
+    content hash, device upload, and jit shapes).  Compile from a fresh
+    `PlanCompiler` to re-impose the strategy wholesale.
     """
 
     n_shards: int = 1

@@ -100,25 +100,17 @@ def test_empty_registry_compiles_to_empty_plan():
     assert plan.n_shards == 0 and plan.n_slots == 0 and plan.tenants == ()
 
 
-def test_legacy_plan_wrapper_warns_and_matches_compiler(registry):
-    with pytest.warns(DeprecationWarning, match="PlanCompiler"):
-        legacy = registry.plan()
+def test_legacy_plan_api_is_gone(registry):
+    """The PR-4 one-release grace is over: the deprecated plan() adapter
+    and the PopulationPlan shape no longer exist — the compiler is the
+    only way to build launch plans."""
+    assert not hasattr(registry, "plan")
+    with pytest.raises(ImportError):
+        from repro.serve.circuits import PopulationPlan  # noqa: F401
+    # the replacement path compiles the same catalog directly
     compiled = PlanCompiler("ref").compile(registry.catalog())
     (shard,) = compiled.shards
-    assert legacy.tenants == shard.slot_tenants
-    assert legacy.generation == compiled.generation
-    np.testing.assert_array_equal(legacy.opcodes, shard.opcodes)
-    np.testing.assert_array_equal(legacy.in_width, shard.in_width)
-    # cached until the registry mutates
-    with pytest.warns(DeprecationWarning):
-        assert registry.plan() is legacy
-    # the legacy shape cannot express ensembles
-    registry.add_ensemble(
-        "ens", [make_servable(7 + i, 4, 2, 30, 2) for i in range(3)]
-    )
-    with pytest.warns(DeprecationWarning):
-        with pytest.raises(ValueError, match="ensemble"):
-            registry.plan()
+    assert shard.slot_tenants == tuple(registry)
 
 
 # ---------------------------------------------------------------------------
