@@ -2,8 +2,8 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test soak-churn lint dev-deps bench-serve bench-async \
-        bench-autoscale check-bench example-serve example-quickstart \
-        example-async smoke
+        bench-autoscale check-bench trace-demo example-serve \
+        example-quickstart example-async smoke
 
 dev-deps:
 	$(PYTHON) -m pip install -r requirements-dev.txt
@@ -30,6 +30,13 @@ bench-async:
 
 bench-autoscale:
 	$(PYTHON) benchmarks/serve_autoscale.py
+
+# record a full-stack serving trace (request spans + tick phases +
+# autoscale instants on one timeline); open the file at ui.perfetto.dev
+trace-demo:
+	$(PYTHON) benchmarks/serve_autoscale.py --tenants 6 --qps 60 \
+	  --phase-s 0.8 --mean-rows 3 --trace trace_fleet.json
+	@echo "wrote trace_fleet.json — open at https://ui.perfetto.dev"
 
 # validate benchmark output + publish repo-root BENCH_*.json (CI gate)
 check-bench:

@@ -17,7 +17,12 @@ CI runs the serving benchmarks, then this checker.  Two jobs:
      global 30% — so one noisy benchmark can run with a wider gate
      without loosening the stable ones.  Set
      ``CHECK_BENCH_SKIP_REGRESSION=1`` to validate without gating, e.g.
-     when re-baselining after an intentional trade-off.
+     when re-baselining after an intentional trade-off.  Records that
+     carry a ``trace_overhead_pct`` field (the in-process QPS cost of
+     *enabling* the trace recorder) are additionally gated against
+     ``CHECK_BENCH_MAX_TRACE_OVERHEAD_PCT`` (default 2%); the
+     instrumented-but-disabled path is the benchmarks' normal
+     configuration, so its cost is what the QPS tolerance above gates.
 
 Only after both pass is the new result copied over the repo-root
 ``BENCH_*.json`` trajectory name (what the workflow uploads as an
@@ -37,14 +42,19 @@ RESULTS_DIR = os.path.join(os.path.dirname(os.path.abspath(__file__)), "..",
 REPO_ROOT = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 
 # keys every per-backend record must carry for the trajectory to be
-# comparable across PRs
+# comparable across PRs; dotted keys reach into nested reports
+# (e.g. "server.phase_breakdown" = the tick phase split of the wrapped
+# server inside an async front-end record)
 REQUIRED_KEYS = {
-    "serve_circuits": ("backend", "qps", "p50_tick_ms", "p99_tick_ms",
-                       "mean_occupancy", "parity_mismatches"),
+    "serve_circuits": ("backend", "qps", "qps_window", "p50_tick_ms",
+                       "p99_tick_ms", "mean_occupancy", "parity_mismatches",
+                       "phase_breakdown", "trace_overhead_pct"),
     "serve_async": ("backend", "miss_rate", "p50_latency_ms",
-                    "p99_latency_ms", "mean_batch_fill", "completed"),
+                    "p99_latency_ms", "mean_batch_fill", "completed",
+                    "server.phase_breakdown"),
     "serve_autoscale": ("backend", "qps", "miss_rate", "n_rebalances",
-                        "mean_swap_ms", "shards_reused_frac"),
+                        "mean_swap_ms", "shards_reused_frac",
+                        "server.phase_breakdown"),
 }
 
 # where each benchmark's throughput number lives in a record
@@ -63,6 +73,13 @@ DEFAULT_TOLERANCES = {
     "serve_autoscale": 0.50,
 }
 
+# ceiling on `trace_overhead_pct` (the in-process, back-to-back QPS cost
+# of *enabling* the trace recorder, in percent — low-noise because both
+# legs share warm jit caches).  The cost of the instrumented-but-DISABLED
+# path — the benchmarks' normal configuration — is gated by the standard
+# QPS-vs-committed-baseline tolerance above.
+DEFAULT_MAX_TRACE_OVERHEAD_PCT = 2.0
+
 
 def _tolerance(name: str) -> float:
     for env in (f"CHECK_BENCH_MAX_QPS_DROP_{name.upper()}",
@@ -70,6 +87,17 @@ def _tolerance(name: str) -> float:
         if env in os.environ:
             return float(os.environ[env])
     return DEFAULT_TOLERANCES.get(name, DEFAULT_MAX_QPS_DROP)
+
+
+def _get_path(rec: dict, key: str):
+    """Resolve a possibly-dotted key ("server.phase_breakdown") in a
+    record; returns None when any step is missing."""
+    cur = rec
+    for part in key.split("."):
+        if not isinstance(cur, dict) or part not in cur:
+            return None
+        cur = cur[part]
+    return cur
 
 
 def _validate(name: str, src: str) -> list:
@@ -88,12 +116,36 @@ def _validate(name: str, src: str) -> list:
         )
     required = REQUIRED_KEYS.get(name, ("backend",))
     for i, rec in enumerate(payload):
-        missing = [k for k in required if k not in rec]
+        missing = [k for k in required if _get_path(rec, k) is None]
         if missing:
             raise SystemExit(
                 f"{name}: result[{i}] is missing trajectory keys {missing}"
             )
     return payload
+
+
+def _gate_trace_overhead(name: str, payload: list) -> None:
+    """Fail when enabling tracing cost more QPS than the ceiling allows
+    (`CHECK_BENCH_MAX_TRACE_OVERHEAD_PCT` to override).  Records without
+    a ``trace_overhead_pct`` field are not measured for this and pass."""
+    ceiling = float(os.environ.get("CHECK_BENCH_MAX_TRACE_OVERHEAD_PCT",
+                                   DEFAULT_MAX_TRACE_OVERHEAD_PCT))
+    for rec in payload:
+        pct = rec.get("trace_overhead_pct")
+        if pct is None:
+            continue
+        be = rec.get("backend")
+        verdict = "OK" if pct <= ceiling else "TOO HIGH"
+        print(f"{name}[{be}]: trace overhead {pct:+.2f}% "
+              f"(ceiling {ceiling:.1f}%) {verdict}")
+        if pct > ceiling:
+            raise SystemExit(
+                f"{name}[{be}]: enabling tracing cost {pct:.2f}% QPS "
+                f"(ceiling {ceiling:.1f}%). The recorder's hot path "
+                f"regressed — or the runner is very noisy; raise "
+                f"CHECK_BENCH_MAX_TRACE_OVERHEAD_PCT only if you've "
+                f"ruled out the former."
+            )
 
 
 def _gate_regression(name: str, payload: list, baseline_path: str) -> None:
@@ -159,6 +211,7 @@ def check_one(name: str, dest: str) -> str:
     src = os.path.join(RESULTS_DIR, f"{name}.json")
     payload = _validate(name, src)
     out = os.path.join(REPO_ROOT, dest)
+    _gate_trace_overhead(name, payload)
     _gate_regression(name, payload, out)
     with open(out, "w") as f:
         json.dump(payload, f, indent=1)

@@ -58,6 +58,19 @@ def save_json(name: str, payload):
         json.dump(payload, f, indent=1)
 
 
+def trace_dest(path, backend: str, backends) -> "str | None":
+    """Per-backend trace file name for a ``--trace PATH`` flag: with one
+    backend the path is used as given; with several, each backend's trace
+    lands at ``<root>.<backend><ext>`` so runs don't overwrite each other.
+    """
+    if not path:
+        return None
+    if len(backends) <= 1:
+        return path
+    root, ext = os.path.splitext(path)
+    return f"{root}.{backend}{ext or '.json'}"
+
+
 def csv_row(name: str, us_per_call: float, derived: str) -> str:
     return f"{name},{us_per_call:.1f},{derived}"
 

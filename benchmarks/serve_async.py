@@ -29,11 +29,12 @@ import numpy as np
 
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
-from benchmarks.common import save_json
+from benchmarks.common import save_json, trace_dest
 from benchmarks.serve_circuits import make_fleet
 from repro import runtime
 from repro.serve.async_frontend import AsyncCircuitServer
 from repro.serve.circuits import CircuitServer, TenantQoS
+from repro.serve.observability import TraceRecorder, export_chrome
 
 # deadline tiers cycled across tenants (seconds, scaled by --deadline-scale)
 TIERS = (
@@ -66,7 +67,8 @@ def build_schedule(tenants, registry, *, qps: float, duration_s: float,
 
 def run(backend: str = "ref", n_tenants: int = 6, qps: float = 120.0,
         duration_s: float = 2.0, mean_rows: int = 8,
-        deadline_scale: float = 1.0, seed: int = 0) -> dict:
+        deadline_scale: float = 1.0, seed: int = 0,
+        trace_path: "str | None" = None) -> dict:
     rng = np.random.RandomState(seed)
     registry = make_fleet(n_tenants, rng)
     tenants = list(registry)
@@ -79,7 +81,11 @@ def run(backend: str = "ref", n_tenants: int = 6, qps: float = 120.0,
             max_wait_s=0.25 * deadline_s * deadline_scale,
             default_deadline_s=deadline_s * deadline_scale,
         ))
-    server = CircuitServer(registry, backend=backend)
+    # tracing on only when a trace was asked for: the recorder's append
+    # cost is µs-scale against ms ticks, but the benchmark's default
+    # configuration stays the production one (instrumented, disabled)
+    tracer = TraceRecorder(enabled=bool(trace_path))
+    server = CircuitServer(registry, backend=backend, tracer=tracer)
 
     # Warm up the fused launch (jit compile) outside the measured window —
     # a cold fire would charge multi-second compile time to whichever
@@ -92,6 +98,7 @@ def run(backend: str = "ref", n_tenants: int = 6, qps: float = 120.0,
             for t in tenants
         ])
     server.reset_stats()
+    tracer.clear()  # drop warmup events: the trace covers the timed window
 
     schedule = build_schedule(tenants, registry, qps=qps,
                               duration_s=duration_s, mean_rows=mean_rows,
@@ -137,6 +144,11 @@ def run(backend: str = "ref", n_tenants: int = 6, qps: float = 120.0,
         "parity_mismatches": parity_mismatches,
         "server": server.stats.report(),
     })
+    if trace_path:
+        export_chrome(tracer, trace_path)
+        rep.update({
+            "trace_path": trace_path, "trace_events": len(tracer),
+        })
     assert rep["parity_mismatches"] == 0
     assert rep["completed"] + rep["shed"] + rejected == len(schedule)
     # independently-counted failed futures must agree with the stats'
@@ -165,13 +177,19 @@ def main():
                     choices=implemented,
                     help="execution backend(s) to bench (repeatable; "
                          "default: ref)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record the run and write a Chrome-trace/Perfetto "
+                         "JSON (with several --backend flags, each gets "
+                         "PATH with '.<backend>' before the extension)")
     args = ap.parse_args()
 
+    backends = args.backend or ["ref"]
     results = []
-    for backend in args.backend or ["ref"]:
+    for backend in backends:
         rep = run(backend=backend, n_tenants=args.tenants, qps=args.qps,
                   duration_s=args.duration_s, mean_rows=args.mean_rows,
-                  deadline_scale=args.deadline_scale)
+                  deadline_scale=args.deadline_scale,
+                  trace_path=trace_dest(args.trace, backend, backends))
         results.append(rep)
         print(f"--- backend={rep['backend']} ({rep['n_tenants']} tenants, "
               f"{rep['offered_qps']} req/s offered) ---")
@@ -180,6 +198,12 @@ def main():
                   "mean_batch_fill", "fires", "fire_reasons",
                   "max_queue_depth_rows"):
             print(f"  {k:23s} {rep[k]}")
+        pb = rep["server"]["phase_breakdown"]
+        print(f"  host/kernel share      {pb['host_share']} / "
+              f"{pb['kernel_share']}")
+        if rep.get("trace_path"):
+            print(f"  trace                  {rep['trace_path']} "
+                  f"({rep['trace_events']} events)")
         if args.expect_no_miss:
             assert rep["deadline_misses"] == 0 and rep["rejected"] == 0, (
                 f"backend {backend}: {rep['deadline_misses']} deadline "

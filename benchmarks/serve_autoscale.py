@@ -40,7 +40,7 @@ import numpy as np
 
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
-from benchmarks.common import save_json
+from benchmarks.common import save_json, trace_dest
 from benchmarks.serve_circuits import SHAPES, make_fleet
 from repro import runtime
 from repro.core import encoding as E
@@ -54,6 +54,7 @@ from repro.serve.autoscale import (
     HysteresisPolicy,
 )
 from repro.serve.circuits import CircuitServer, TenantQoS
+from repro.serve.observability import TraceRecorder, export_chrome
 from repro.serve.planning import PlacementPolicy
 
 
@@ -99,7 +100,8 @@ def phase_schedule(tenants, weights, registry_circuits, *, t0, duration_s,
 def run(backend: str = "ref", n_tenants: int = 9, qps: float = 150.0,
         phase_s: float = 1.2, mean_rows: int = 4, shards: int = 3,
         skew: float = 0.85, churn: int = 2, control_interval_s: float = 0.12,
-        deadline_s: float = 2.5, seed: int = 0) -> dict:
+        deadline_s: float = 2.5, seed: int = 0,
+        trace_path: "str | None" = None) -> dict:
     rng = np.random.RandomState(seed)
     registry = make_fleet(n_tenants, rng)
     base_tenants = list(registry)
@@ -112,9 +114,10 @@ def run(backend: str = "ref", n_tenants: int = 9, qps: float = 150.0,
     )
     for tenant in base_tenants:
         registry.set_qos(tenant, qos)
+    tracer = TraceRecorder(enabled=bool(trace_path))
     server = CircuitServer(
         registry, backend=backend,
-        policy=PlacementPolicy(n_shards=shards),
+        policy=PlacementPolicy(n_shards=shards), tracer=tracer,
     )
     frontend = AsyncCircuitServer(server)
     controller = AutoscaleController(
@@ -142,6 +145,7 @@ def run(backend: str = "ref", n_tenants: int = 9, qps: float = 150.0,
             for t in base_tenants
         ])
     server.reset_stats()
+    tracer.clear()  # drop warmup events: the trace covers the timed window
 
     # phase traffic: steady → skew+churn → recover
     hot = [t for t in base_tenants if server.plan().shard_of(t) == 0]
@@ -294,6 +298,11 @@ def run(backend: str = "ref", n_tenants: int = 9, qps: float = 150.0,
         "frontend": fs,
         "server": srv,
     }
+    if trace_path:
+        export_chrome(tracer, trace_path)
+        rep.update({
+            "trace_path": trace_path, "trace_events": len(tracer),
+        })
     # acceptance invariants: a rebalance happened under load, no request
     # was lost, unchanged shards were reused, parity held
     assert rep["n_rebalances"] >= 1, "no plan swap was exercised"
@@ -333,15 +342,21 @@ def main():
                     choices=implemented,
                     help="execution backend(s) to bench (repeatable; "
                          "default: ref)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record the run and write a Chrome-trace/Perfetto "
+                         "JSON (with several --backend flags, each gets "
+                         "PATH with '.<backend>' before the extension)")
     args = ap.parse_args()
 
+    backends = args.backend or ["ref"]
     results = []
-    for backend in args.backend or ["ref"]:
+    for backend in backends:
         rep = run(backend=backend, n_tenants=args.tenants, qps=args.qps,
                   phase_s=args.phase_s, mean_rows=args.mean_rows,
                   shards=args.shards, skew=args.skew, churn=args.churn,
                   control_interval_s=args.control_interval_s,
-                  deadline_s=args.deadline_s)
+                  deadline_s=args.deadline_s,
+                  trace_path=trace_dest(args.trace, backend, backends))
         results.append(rep)
         print(f"--- backend={rep['backend']} ({rep['n_tenants']} tenants, "
               f"{rep['offered_qps']} req/s offered, shards "
@@ -359,6 +374,12 @@ def main():
                   f"{ev['shards_reused'] + ev['shards_rebuilt']}, "
                   f"{ev['swap_ms']:.1f} ms, "
                   f"{ev['inflight_requests']} in flight ({ev['reason']})")
+        pb = rep["server"]["phase_breakdown"]
+        print(f"  host/kernel share      {pb['host_share']} / "
+              f"{pb['kernel_share']}")
+        if rep.get("trace_path"):
+            print(f"  trace                  {rep['trace_path']} "
+                  f"({rep['trace_events']} events)")
     save_json("serve_autoscale", results)
 
 

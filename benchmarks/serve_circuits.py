@@ -30,13 +30,14 @@ import numpy as np
 
 sys.path.insert(0, os.path.dirname(os.path.dirname(os.path.abspath(__file__))))
 
-from benchmarks.common import save_json
+from benchmarks.common import save_json, trace_dest
 from repro import runtime
 from repro.core import encoding as E
 from repro.core import gates
 from repro.core.api import ServableCircuit
 from repro.core.genome import CircuitSpec, init_genome
 from repro.serve.circuits import CircuitRegistry, CircuitServer
+from repro.serve.observability import TraceRecorder, export_chrome
 from repro.serve.planning import PlacementPolicy
 
 # (features, bits/input, gates, classes) per tenant, cycled
@@ -89,13 +90,40 @@ def drive(server: CircuitServer, registry: CircuitRegistry, *, ticks: int,
     return mismatches, max_tick_tenants
 
 
+def measure_trace_overhead(server, registry, *, ticks: int, mean_rows: int,
+                           seed: int) -> float:
+    """QPS cost of *enabling* tracing, in percent: two back-to-back drives
+    over identical traffic (same RNG seed), recorder off then on.  Both
+    legs run in-process on warm jit caches, so the delta isolates the
+    recorder's append cost from runner noise — the number
+    `check_bench.py` gates.  (The cost of the *disabled* instrumentation
+    — one branch per site — is the benchmark's normal configuration and
+    is gated by the standard QPS-vs-baseline tolerance.)"""
+    tracer = server.tracer
+    tracer.disable()
+    t0 = time.perf_counter()
+    drive(server, registry, ticks=ticks, mean_rows=mean_rows,
+          rng=np.random.RandomState(seed))
+    t_off = time.perf_counter() - t0
+    tracer.clear()
+    tracer.enable()
+    t0 = time.perf_counter()
+    drive(server, registry, ticks=ticks, mean_rows=mean_rows,
+          rng=np.random.RandomState(seed))
+    t_on = time.perf_counter() - t0
+    tracer.disable()
+    return (t_on - t_off) / max(t_off, 1e-9) * 100.0
+
+
 def run(ticks: int = 50, n_tenants: int = 8, mean_rows: int = 24,
-        backend: str = "ref", seed: int = 0, shards: int = 1) -> dict:
+        backend: str = "ref", seed: int = 0, shards: int = 1,
+        trace_path: "str | None" = None) -> dict:
     rng = np.random.RandomState(seed)
     registry = make_fleet(n_tenants, rng)
+    tracer = TraceRecorder(enabled=False)
     server = CircuitServer(
         registry, backend=backend,
-        policy=PlacementPolicy(n_shards=shards),
+        policy=PlacementPolicy(n_shards=shards), tracer=tracer,
     )
 
     # warmup: trigger plan build + jit compile outside the timed window
@@ -109,6 +137,11 @@ def run(ticks: int = 50, n_tenants: int = 8, mean_rows: int = 24,
     )
     wall = time.perf_counter() - t0
 
+    overhead = measure_trace_overhead(
+        server, registry, ticks=max(ticks // 2, 8),
+        mean_rows=mean_rows, seed=seed + 1,
+    )
+
     rep = server.stats.report()
     rep.update({
         "impl": server.backend.name,  # legacy key, kept for BENCH continuity
@@ -117,7 +150,14 @@ def run(ticks: int = 50, n_tenants: int = 8, mean_rows: int = 24,
         "max_tick_tenants": max_tick_tenants,
         "wall_s": round(wall, 3),
         "parity_mismatches": mism,
+        "trace_overhead_pct": round(overhead, 2),
     })
+    if trace_path:
+        # the overhead measurement's enabled leg left a real trace behind
+        export_chrome(tracer, trace_path)
+        rep.update({
+            "trace_path": trace_path, "trace_events": len(tracer),
+        })
     return rep
 
 
@@ -138,6 +178,10 @@ def main():
                     help="plan shards (one fused launch per shard per "
                          "tick; shards land on distinct devices when the "
                          "host has several)")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="write a Chrome-trace/Perfetto JSON of the traced "
+                         "leg (with several --backend flags, each gets "
+                         "PATH with '.<backend>' before the extension)")
     args = ap.parse_args()
 
     backends = args.backend or ["ref"]
@@ -145,13 +189,22 @@ def main():
     for backend in backends:
         rep = run(ticks=args.ticks, n_tenants=args.tenants,
                   mean_rows=args.mean_rows, backend=backend,
-                  shards=args.shards)
+                  shards=args.shards,
+                  trace_path=trace_dest(args.trace, backend, backends))
         results.append(rep)
         print(f"--- backend={rep['backend']} ({rep['n_tenants']} tenants) ---")
         for k in ("qps", "rows_per_s", "p50_tick_ms", "p99_tick_ms",
                   "mean_occupancy", "max_tenants_per_launch", "launches",
-                  "ticks", "parity_mismatches"):
+                  "ticks", "parity_mismatches", "trace_overhead_pct"):
             print(f"  {k:23s} {rep[k]}")
+        pb = rep["phase_breakdown"]
+        print("  phase ms/tick          " + "  ".join(
+            f"{p}={v}" for p, v in pb["per_tick_ms"].items()))
+        print(f"  host/kernel share      {pb['host_share']} / "
+              f"{pb['kernel_share']}")
+        if rep.get("trace_path"):
+            print(f"  trace                  {rep['trace_path']} "
+                  f"({rep['trace_events']} events)")
         assert rep["parity_mismatches"] == 0
         # fusion guard: some tick must have served >= 4 heterogeneous
         # tenants across at most `shards` launches (drive() asserts the

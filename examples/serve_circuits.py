@@ -31,6 +31,11 @@ from repro.core.api import AutoTinyClassifier
 from repro.core.encoding import EncodingConfig
 from repro.data import load_dataset, train_test_split
 from repro.serve.circuits import BUNDLE_SUFFIX, CircuitRegistry, CircuitServer
+from repro.serve.observability import (
+    TraceRecorder,
+    export_chrome,
+    prometheus_text,
+)
 from repro.serve.planning import PlacementPolicy
 
 # tenant name → dataset (heterogeneous widths and class counts)
@@ -66,6 +71,9 @@ def main():
     ap.add_argument("--artifacts", default=None,
                     help="artifact directory; if it already holds "
                          f"*{BUNDLE_SUFFIX} bundles, fitting is skipped")
+    ap.add_argument("--trace", default=None, metavar="PATH",
+                    help="record the serving run and write a Chrome-trace/"
+                         "Perfetto JSON (open at https://ui.perfetto.dev)")
     args = ap.parse_args()
 
     artifact_dir = args.artifacts or tempfile.mkdtemp(prefix="circuits-")
@@ -78,7 +86,8 @@ def main():
 
     # --- fleet restart: everything below runs from disk, no fit() ------
     registry = CircuitRegistry.load_dir(artifact_dir)
-    server = CircuitServer(registry)
+    tracer = TraceRecorder(enabled=bool(args.trace))
+    server = CircuitServer(registry, tracer=tracer)
     print(f"\nbooted server from {len(registry)} on-disk artifacts "
           f"(backend={server.backend.name})")
 
@@ -104,6 +113,13 @@ def main():
 
     for k, v in server.stats.report().items():
         print(f"  {k:23s} {v}")
+
+    if args.trace:
+        export_chrome(tracer, args.trace)
+        print(f"\nwrote {len(tracer)} trace events to {args.trace} — "
+              "open at https://ui.perfetto.dev")
+        print("Prometheus snapshot of the same run:")
+        print(prometheus_text(server_stats=server.stats))
 
     # --- declarative placement: same catalog, sharded plan -------------
     print("\nsharded serving (same catalog, PlacementPolicy(n_shards=2)) ...")

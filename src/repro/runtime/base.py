@@ -100,6 +100,28 @@ class EvalBackend(abc.ABC):
         )
         return out[0]
 
+    def instrument(self, hook) -> "EvalBackend":
+        """Wrap this backend so every ``eval_*`` launch runs inside a
+        caller-supplied context.
+
+        ``hook(kind, **meta)`` is called per launch with the entry-point
+        name (``"eval_population"``, ``"eval_population_spans"``,
+        ``"eval_circuit"``) and cheap launch metadata (population size,
+        span words); it must return a context manager, and the launch
+        executes inside it.  A `TraceRecorder.span` fits directly::
+
+            traced = backend.instrument(
+                lambda kind, **meta: tracer.span(
+                    "backend." + kind, cat="kernel", **meta)
+            )
+
+        The proxy delegates ``capabilities``/``span_alignment`` and keeps
+        the backend ``name``, so it is substitutable anywhere an
+        `EvalBackend` is — the serving engine launches through the proxy
+        while plan compilation keeps using the raw backend.
+        """
+        return _InstrumentedBackend(self, hook)
+
     def span_alignment(self, requested: int | None = None) -> int:
         """Resolve a requested word-span alignment against this backend.
 
@@ -116,3 +138,52 @@ class EvalBackend(abc.ABC):
 
     def __repr__(self) -> str:
         return f"<{type(self).__name__} {self.name!r}>"
+
+
+class _InstrumentedBackend(EvalBackend):
+    """Delegating proxy reporting every launch through a hook context.
+
+    Stateless beyond the pair (inner backend, hook): safe to share
+    across threads exactly like the backend it wraps.  The hook runs on
+    the *dispatching* thread around the launch call, so with an async
+    dispatch (jax on device) it measures submit cost, and the readback
+    wait shows up wherever the caller blocks — which is exactly how the
+    serving tick's phase breakdown wants it split.
+    """
+
+    def __init__(self, inner: EvalBackend, hook):
+        self._inner = inner
+        self._hook = hook
+        self.name = inner.name
+
+    def capabilities(self) -> BackendCapabilities:
+        return self._inner.capabilities()
+
+    def span_alignment(self, requested: int | None = None) -> int:
+        return self._inner.span_alignment(requested)
+
+    def eval_population(self, opcodes, edge_src, out_src, x_words):
+        with self._hook("eval_population", population=int(opcodes.shape[0]),
+                        words=int(x_words.shape[-1])):
+            return self._inner.eval_population(
+                opcodes, edge_src, out_src, x_words
+            )
+
+    def eval_population_spans(self, opcodes, edge_src, out_src, x_words,
+                              word_off, in_width, *, span_words: int):
+        with self._hook("eval_population_spans",
+                        population=int(opcodes.shape[0]),
+                        span_words=int(span_words)):
+            return self._inner.eval_population_spans(
+                opcodes, edge_src, out_src, x_words, word_off, in_width,
+                span_words=span_words,
+            )
+
+    def eval_circuit(self, opcodes, edge_src, out_src, x_words):
+        with self._hook("eval_circuit", words=int(x_words.shape[-1])):
+            return self._inner.eval_circuit(
+                opcodes, edge_src, out_src, x_words
+            )
+
+    def __repr__(self) -> str:
+        return f"<_InstrumentedBackend over {self._inner!r}>"

@@ -62,6 +62,9 @@ class AsyncCircuitServer:
             latency_est_s=latency_est_s,
         )
         self.stats = FrontendStats(backend=server.backend.name)
+        # one timeline across the stack: the front-end traces onto
+        # whatever recorder the wrapped server was constructed with
+        self.tracer = server.tracer
         self._lock = threading.Lock()
         self._wake = threading.Event()
         self._stop = threading.Event()
@@ -133,18 +136,30 @@ class AsyncCircuitServer:
             )
         if deadline <= now:
             self.stats.record_rejected()
+            self.tracer.instant(
+                "request.rejected", cat="request", tenant=tenant,
+                deadline=float(deadline),
+            )
             raise AdmissionError(
                 f"tenant {tenant!r}: deadline {deadline:.6f} already passed "
                 f"at submit (now={now:.6f})"
             )
         fut: Future = Future()
+        # async (b/.../e) span: the request's lifecycle crosses from this
+        # submit thread to the scheduler/driver thread, correlated by id
+        trace_id = self.tracer.next_id() if self.tracer.enabled else 0
         req = Request(
             tenant_id=tenant, features=x, deadline=float(deadline),
-            future=fut, submitted_at=now,
+            future=fut, submitted_at=now, trace_id=trace_id,
         )
+        if trace_id:
+            self.tracer.async_begin(
+                "request", trace_id, cat="request", tenant=tenant,
+                rows=req.rows, deadline_in_s=round(deadline - now, 6),
+            )
         with self._lock:
             self.scheduler.push(req)
-            self.stats.submitted += 1
+            self.stats.record_submitted()
         self._wake.set()
         return fut
 
@@ -174,18 +189,41 @@ class AsyncCircuitServer:
         with self._lock:
             decision = self.scheduler.poll(now)
             self.stats.record_poll(decision.queue_rows)
+        self.tracer.counter(
+            "queue.rows", decision.queue_rows, cat="scheduler",
+            track="scheduler",
+        )
         self._complete(decision, now)
         return decision
 
     def _complete(self, decision: FireDecision, now: float) -> None:
         for req in decision.expired:
             self.stats.record_shed(1)
+            if req.trace_id:
+                self.tracer.async_end(
+                    "request", req.trace_id, cat="request", outcome="shed",
+                    queued_s=round(now - req.submitted_at, 6),
+                )
             req.future.set_exception(DeadlineExceededError(
                 f"tenant {req.tenant_id!r}: deadline passed after "
                 f"{now - req.submitted_at:.6f}s in queue"
             ))
         if not decision.batch:
             return
+        self.tracer.instant(
+            "scheduler.fire", cat="scheduler", track="scheduler",
+            reason=decision.reason,
+            shards=list(decision.shards),
+            shard_reasons=[f"{s}:{r}" for s, r in decision.shard_reasons],
+            requests=len(decision.batch),
+        )
+        for req in decision.batch:
+            if req.trace_id:
+                self.tracer.async_instant(
+                    "request", req.trace_id, cat="request", state="fired",
+                    reason=decision.reason,
+                    queued_s=round(now - req.submitted_at, 6),
+                )
         try:
             # read the placement before the step: this is the plan the
             # step is about to launch on, and reading it afterwards could
@@ -199,6 +237,11 @@ class AsyncCircuitServer:
             # its own requests' futures, never strand them (or, from the
             # background driver, kill the scheduler thread)
             for r in decision.batch:
+                if r.trace_id:
+                    self.tracer.async_end(
+                        "request", r.trace_id, cat="request",
+                        outcome="error", error=type(err).__name__,
+                    )
                 r.future.set_exception(err)
             raise
         done = self.clock()
@@ -218,6 +261,14 @@ class AsyncCircuitServer:
             self.stats.record_request(
                 done - req.submitted_at, late=done > req.deadline
             )
+            if req.trace_id:
+                failed = isinstance(out, Exception)
+                self.tracer.async_end(
+                    "request", req.trace_id, cat="request",
+                    outcome=("error" if failed
+                             else "late" if done > req.deadline else "ok"),
+                    latency_s=round(done - req.submitted_at, 6),
+                )
             if isinstance(out, Exception):
                 req.future.set_exception(out)
             else:

@@ -37,6 +37,7 @@ class Request:
     deadline: float        # absolute, in the front-end's clock domain
     future: Future
     submitted_at: float
+    trace_id: int = 0      # async-span correlation id (0 = untraced)
 
     @property
     def rows(self) -> int:

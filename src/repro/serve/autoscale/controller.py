@@ -126,7 +126,7 @@ class AutoscaleController:
 
         # C-level dict copies: atomic under the GIL, so a serving thread
         # inserting a new shard/tenant key mid-collect cannot blow up the
-        # iteration below (ServerStats itself is lock-free by design)
+        # iteration below (no need to take the stats lock for a snapshot)
         shard_rows = dict(stats.shard_rows)
         shard_cells = dict(stats.shard_cells)
         occupancy: dict[int, float] = {}
@@ -193,8 +193,24 @@ class AutoscaleController:
         now = self.clock() if now is None else now
         telemetry = self.collect(now)
         decision = self.policy.decide(telemetry)
+        tracer = self.server.tracer
+        tracer.counter(
+            "autoscale.miss_rate", round(telemetry.miss_rate, 6),
+            cat="autoscale", track="autoscale",
+        )
+        tracer.counter(
+            "autoscale.queue_rows", telemetry.queue_rows,
+            cat="autoscale", track="autoscale",
+        )
         if decision.action == "none":
             return None
+        tracer.instant(
+            "autoscale.decision", cat="autoscale", track="autoscale",
+            action=decision.action, reason=decision.reason,
+            n_shards=decision.n_shards, from_shards=telemetry.n_shards,
+            miss_rate=round(telemetry.miss_rate, 6),
+            queue_rows=telemetry.queue_rows,
+        )
         weights = None
         if decision.action == "rebalance" and any(
                 telemetry.tenant_rows.values()):

@@ -35,8 +35,14 @@ import numpy as np
 from repro import runtime
 from repro.core import encoding as E
 from repro.core.api import decode_predictions
-from repro.serve.circuits.metrics import RebalanceEvent, ServerStats, TickReport
+from repro.serve.circuits.metrics import (
+    TICK_PHASES,
+    RebalanceEvent,
+    ServerStats,
+    TickReport,
+)
 from repro.serve.circuits.registry import CircuitRegistry
+from repro.serve.observability.trace import NULL_TRACER, TraceRecorder
 from repro.serve.planning import (
     CompiledPlan,
     PlacementPolicy,
@@ -81,6 +87,7 @@ class CircuitServer:
         policy: PlacementPolicy | None = None,
         span_align: int | None = None,
         stable_shapes: bool = True,
+        tracer: TraceRecorder | None = None,
     ):
         if policy is not None and span_align is not None:
             raise ValueError(
@@ -104,6 +111,15 @@ class CircuitServer:
         # whenever a new active-slot count shows up, which is exactly when
         # requests are queued against a deadline.
         self.stable_shapes = bool(stable_shapes)
+        # one timeline for the whole stack: the front-end, the autoscale
+        # controller, and the backend launch hooks all record into the
+        # server's tracer.  NULL_TRACER (the default) is permanently
+        # disabled — every instrumentation point costs one branch.
+        self.tracer = NULL_TRACER if tracer is None else tracer
+        # launches dispatch through the instrumented proxy so each
+        # kernel-level eval carries its own trace span; plan compilation
+        # keeps using the raw backend
+        self._exec = self.backend.instrument(self._launch_span)
         self.stats = ServerStats(backend=self.backend.name)
         self._lock = threading.Lock()
         # serializes whole launches: a step() must observe its own tick
@@ -121,6 +137,11 @@ class CircuitServer:
         # shard s launches on device s % n (only when the policy shards
         # and the host actually has multiple devices)
         self._devices = self._shard_devices(policy)
+
+    def _launch_span(self, kind: str, **meta):
+        """Launch hook handed to `EvalBackend.instrument` — one trace
+        span per kernel-level eval call (no-op while tracing is off)."""
+        return self.tracer.span(f"backend.{kind}", cat="kernel", **meta)
 
     @staticmethod
     def _shard_devices(policy: PlacementPolicy) -> "tuple | None":
@@ -324,6 +345,16 @@ class CircuitServer:
             plan_hash=compiled.content_hash,
         )
         self.stats.record_rebalance(event)
+        # plan swaps land as instants on the shared timeline, next to the
+        # request spans and tick phases they interleave with
+        self.tracer.instant(
+            "plan.swap", cat="autoscale", track="autoscale",
+            action=action, reason=reason,
+            from_shards=event.from_shards, to_shards=event.to_shards,
+            shards_reused=reused, shards_rebuilt=rebuilt,
+            inflight=inflight, swap_ms=round(event.swap_ms, 3),
+            generation=event.generation,
+        )
         return event
 
     def shard_of(self, tenant: str) -> int:
@@ -355,7 +386,14 @@ class CircuitServer:
             return self._tick_locked()
 
     def _tick_locked(self) -> TickReport:
-        t0 = time.perf_counter()
+        perf = time.perf_counter
+        t0 = perf()
+        # wall time per phase this tick (encode / pack / device_put /
+        # launch / readback / decode) — always measured: a handful of
+        # perf_counter reads against ms-scale ticks, and the breakdown is
+        # the BENCH before-picture the device-resident hot path must beat
+        phase = dict.fromkeys(TICK_PHASES, 0.0)
+        tracer = self.tracer
         # Snapshot pending BEFORE the plan: any tenant that reached the
         # queue was registered at submit time, so a plan refreshed now can
         # only be missing it if a concurrent remove won — and everything
@@ -363,6 +401,16 @@ class CircuitServer:
         with self._lock:
             batch = [(t, reqs) for t, reqs in self._pending.items() if reqs]
             self._pending = {}
+        tracer.begin("tick", cat="tick")
+        try:
+            report = self._tick_traced(t0, perf, phase, batch)
+        finally:
+            tracer.end("tick", cat="tick")
+        self.stats.record(report)
+        return report
+
+    def _tick_traced(self, t0, perf, phase, batch) -> TickReport:
+        tracer = self.tracer
         # plan, tensors, devices and span alignment are one consistent
         # snapshot: a concurrent swap_plan re-points the live attributes,
         # but this tick launches entirely on what it read here
@@ -411,24 +459,29 @@ class CircuitServer:
                 "member_ids": [None] * len(refs),
             }
             w_t = E.n_words(n_rows)
-            for m, (ref, sc) in enumerate(zip(refs, members)):
-                bits, offsets = E.encode_batched(sc.encoder, xs)
-                entry["offsets"] = offsets
-                packed = E.pack_bits_rows(bits, w_t)
-                shard_work.setdefault(ref.shard, []).append(
-                    (ref.slot, packed, entry, m)
-                )
+            with tracer.span("tick.encode_pack", cat="tick",
+                             tenant=tenant, rows=n_rows):
+                for m, (ref, sc) in enumerate(zip(refs, members)):
+                    t1 = perf()
+                    bits, offsets = E.encode_batched(sc.encoder, xs)
+                    t2 = perf()
+                    entry["offsets"] = offsets
+                    packed = E.pack_bits_rows(bits, w_t)
+                    phase["encode"] += t2 - t1
+                    phase["pack"] += perf() - t2
+                    shard_work.setdefault(ref.shard, []).append(
+                        (ref.slot, packed, entry, m)
+                    )
             entries.append(entry)
 
         if not shard_work:
-            report = TickReport(
+            return TickReport(
                 generation=plan.generation, tenants=0, requests=n_requests,
                 rows=0, launches=0, span_words=0,
-                latency_s=time.perf_counter() - t0, occupancy=0.0,
+                latency_s=perf() - t0, occupancy=0.0,
                 plan_shards=plan.n_shards,
+                phase_s=phase,
             )
-            self.stats.record(report)
-            return report
 
         # Fuse per shard: slot k owns words [k*span, (k+1)*span) of that
         # shard's buffer.  Spans are bucketed to powers of two (then padded
@@ -452,6 +505,7 @@ class CircuitServer:
             k_active = len(items)
             k_pad = shard.n_slots if self.stable_shapes else k_active
             i_max = shard.n_inputs_max
+            t1 = perf()
             x_buf = np.zeros((i_max, k_pad * span), np.uint32)
             for k, (slot, packed, _, _) in enumerate(items):
                 x_buf[: packed.shape[0],
@@ -463,19 +517,28 @@ class CircuitServer:
             opc, edge, outs, in_w = dev[shard.content_hash]
             device = device_for(shard_idx)
             woff_host = np.arange(k_pad, dtype=np.int32) * span
-            if device is None:
-                x_dev = jnp.asarray(x_buf)
-                live_dev = jnp.asarray(live)
-                woff = jnp.asarray(woff_host)
-            else:  # one transfer per buffer, straight to the shard device
-                x_dev = jax.device_put(x_buf, device)
-                live_dev = jax.device_put(live, device)
-                woff = jax.device_put(woff_host, device)
-            out = self.backend.eval_population_spans(
-                opc[slots], edge[slots], outs[slots],
-                x_dev, woff, in_w[slots] * live_dev,
-                span_words=span,
-            )
+            phase["pack"] += perf() - t1  # fused-buffer fill
+            t1 = perf()
+            with tracer.span("tick.device_put", cat="tick",
+                             shard=shard_idx):
+                if device is None:
+                    x_dev = jnp.asarray(x_buf)
+                    live_dev = jnp.asarray(live)
+                    woff = jnp.asarray(woff_host)
+                else:  # one transfer per buffer, straight to shard device
+                    x_dev = jax.device_put(x_buf, device)
+                    live_dev = jax.device_put(live, device)
+                    woff = jax.device_put(woff_host, device)
+            t2 = perf()
+            with tracer.span("tick.launch", cat="tick", shard=shard_idx,
+                             span_words=span, slots=k_active):
+                out = self._exec.eval_population_spans(
+                    opc[slots], edge[slots], outs[slots],
+                    x_dev, woff, in_w[slots] * live_dev,
+                    span_words=span,
+                )
+            phase["device_put"] += t2 - t1
+            phase["launch"] += perf() - t2
             launches.append((shard_idx, span, items, out))
             max_span = max(max_span, span)
             pad_cells += k_pad * span
@@ -488,30 +551,40 @@ class CircuitServer:
         # Read back and decode: member class ids first, then the vote.
         for shard_idx, span, items, out in launches:
             shard = plan.shards[shard_idx]
-            out = np.asarray(out)  # u32[K_pad, O_max, span]
+            t1 = perf()
+            with tracer.span("tick.readback", cat="tick", shard=shard_idx):
+                out = np.asarray(out)  # u32[K_pad, O_max, span]
+            t2 = perf()
             for k, (slot, _, entry, m) in enumerate(items):
                 o_t = int(shard.out_width[slot])
                 entry["member_ids"][m] = decode_predictions(
                     out[k, :o_t], entry["rows"], entry["n_classes"]
                 )
+            phase["readback"] += t2 - t1
+            phase["decode"] += perf() - t2
 
-        for entry in entries:
-            ids = ensemble_vote(
-                np.stack(entry["member_ids"]), entry["n_classes"]
-            )
-            offsets = entry["offsets"]
-            for p, lo, hi in zip(entry["reqs"], offsets[:-1], offsets[1:]):
-                self._results[p.ticket] = ids[lo:hi]
+        t1 = perf()
+        with tracer.span("tick.decode", cat="tick"):
+            for entry in entries:
+                ids = ensemble_vote(
+                    np.stack(entry["member_ids"]), entry["n_classes"]
+                )
+                offsets = entry["offsets"]
+                for p, lo, hi in zip(
+                        entry["reqs"], offsets[:-1], offsets[1:]):
+                    self._results[p.ticket] = ids[lo:hi]
+        phase["decode"] += perf() - t1
 
         total_rows = sum(e["rows"] for e in entries)
-        report = TickReport(
+        tracer.counter("tick.rows", total_rows, cat="tick")
+        return TickReport(
             generation=plan.generation,
             tenants=len(entries),
             requests=n_requests,
             rows=total_rows,
             launches=len(launches),
             span_words=max_span,
-            latency_s=time.perf_counter() - t0,
+            latency_s=perf() - t0,
             occupancy=total_rows / (pad_cells * E.WORD),
             plan_shards=plan.n_shards,
             max_slots_per_launch=max(
@@ -521,6 +594,5 @@ class CircuitServer:
             tenant_rows=tuple(
                 (e["tenant"], e["rows"]) for e in entries
             ),
+            phase_s=phase,
         )
-        self.stats.record(report)
-        return report

@@ -1,0 +1,141 @@
+"""Property tests for serving metrics accounting (hypothesis).
+
+The contract under test: every request admitted by the async front-end
+lands in EXACTLY ONE of four terminal states — ``rejected`` (admission
+control), ``shed`` (expired in queue), ``served_late`` (completed past
+deadline), or on-time — and ``miss_rate`` is consistent with those
+counts.  The end-to-end property drives the real front-end + server
+under an auto-advancing fake clock (each clock read moves time forward,
+so deadlines can pass *between* the scheduler's poll and the launch's
+completion — the only window that can produce ``served_late``).
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import HealthCheck, given, settings
+from hypothesis import strategies as st
+
+from repro.serve.async_frontend import (
+    AdmissionError,
+    AsyncCircuitServer,
+    DeadlineExceededError,
+)
+from repro.serve.circuits import CircuitRegistry, CircuitServer, TenantQoS
+from repro.serve.circuits.metrics import FrontendStats
+from tests.test_serve_circuits import make_servable
+
+RNG = np.random.RandomState(11)
+
+
+class SteppingClock:
+    """Every read advances time: latency exists even under a fake clock."""
+
+    def __init__(self, t: float = 0.0, step: float = 0.0):
+        self.t = t
+        self.step = step
+
+    def __call__(self) -> float:
+        self.t += self.step
+        return self.t
+
+
+# one tiny tenant, module-scoped: the jitted launch shape is stable, so
+# hypothesis examples after the first run in milliseconds
+_REGISTRY = CircuitRegistry()
+_REGISTRY.add("t0", make_servable(0, 4, 2, 30, 2))
+_REGISTRY.set_qos("t0", TenantQoS(
+    max_batch=10 ** 6, max_wait_s=10.0, default_deadline_s=1.0,
+))
+
+
+def _frontend(clock):
+    server = CircuitServer(_REGISTRY, backend="ref")
+    return AsyncCircuitServer(server, clock=clock)
+
+
+@settings(max_examples=20, deadline=None,
+          suppress_health_check=[HealthCheck.too_slow])
+@given(
+    offsets=st.lists(
+        st.floats(min_value=-0.5, max_value=3.0,
+                  allow_nan=False, allow_infinity=False),
+        min_size=1, max_size=8,
+    ),
+    clock_step=st.floats(min_value=1e-4, max_value=0.05),
+    pump_gaps=st.lists(
+        st.floats(min_value=0.0, max_value=1.0), min_size=1, max_size=6,
+    ),
+)
+def test_every_admitted_request_hits_exactly_one_terminal_state(
+        offsets, clock_step, pump_gaps):
+    clock = SteppingClock(100.0, step=clock_step)
+    frontend = _frontend(clock)
+    futs = []
+    rejected_seen = 0
+    for off in offsets:
+        x = RNG.randn(1, 4).astype(np.float32)
+        try:
+            futs.append(frontend.enqueue("t0", x, deadline_s=off))
+        except AdmissionError:
+            rejected_seen += 1
+    for gap in pump_gaps:
+        clock.t += gap
+        frontend.pump()
+    # force the stragglers out: every future must resolve
+    while frontend.scheduler.pending_requests():
+        frontend._drain_now()
+
+    fs = frontend.stats
+    assert all(f.done() for f in futs)
+    shed_seen = sum(
+        isinstance(f.exception(), DeadlineExceededError) for f in futs
+    )
+    ok_seen = sum(f.exception() is None for f in futs)
+
+    # the four terminal states partition every attempted request
+    assert fs.rejected == rejected_seen
+    assert fs.submitted == len(futs)
+    assert fs.completed + fs.shed == fs.submitted
+    assert fs.shed == shed_seen
+    assert fs.completed == ok_seen
+    assert 0 <= fs.served_late <= fs.completed
+    on_time = fs.completed - fs.served_late
+    assert (fs.rejected + fs.shed + fs.served_late + on_time
+            == len(offsets))
+
+    rep = fs.report()
+    assert rep["miss_rate"] == round(
+        (fs.shed + fs.served_late) / max(fs.submitted, 1), 4
+    )
+    assert rep["deadline_misses"] == fs.shed + fs.served_late
+
+
+@settings(max_examples=50, deadline=None)
+@given(events=st.lists(
+    st.sampled_from(["submit", "reject", "shed", "on_time", "late"]),
+    max_size=60,
+))
+def test_frontend_stats_counters_never_disagree(events):
+    """Pure accounting: any interleaving of record calls keeps the
+    terminal-state arithmetic consistent."""
+    fs = FrontendStats()
+    admitted = 0
+    finished = 0
+    for e in events:
+        if e == "submit":
+            fs.record_submitted()
+            admitted += 1
+        elif e == "reject":
+            fs.record_rejected()
+        elif admitted > finished:  # terminal events need a live request
+            finished += 1
+            if e == "shed":
+                fs.record_shed(1)
+            else:
+                fs.record_request(0.01, late=(e == "late"))
+    rep = fs.report()
+    assert fs.deadline_misses == fs.shed + fs.served_late
+    assert rep["miss_rate"] <= 1.0
+    assert fs.completed + fs.shed <= fs.submitted
+    assert rep["deadline_misses"] == rep["shed"] + rep["served_late"]
