@@ -2,8 +2,8 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test soak-churn lint dev-deps bench-serve bench-async \
-        bench-autoscale check-bench trace-demo example-serve \
-        example-quickstart example-async smoke
+        bench-autoscale bench-fleet check-bench trace-demo example-serve \
+        example-quickstart example-async example-fleet smoke
 
 dev-deps:
 	$(PYTHON) -m pip install -r requirements-dev.txt
@@ -31,6 +31,14 @@ bench-async:
 bench-autoscale:
 	$(PYTHON) benchmarks/serve_autoscale.py
 
+# CI's fleet-smoke invocation: replay the committed trace across two
+# in-process hosts; the full 1e5-event run is `benchmarks/serve_fleet.py`
+# with no --workload flag
+bench-fleet:
+	XLA_FLAGS=--xla_force_host_platform_device_count=8 \
+	  $(PYTHON) benchmarks/serve_fleet.py \
+	  --workload benchmarks/workloads/fleet_smoke.jsonl.gz --chunk-size 500
+
 # record a full-stack serving trace (request spans + tick phases +
 # autoscale instants on one timeline); open the file at ui.perfetto.dev
 trace-demo:
@@ -42,7 +50,8 @@ trace-demo:
 check-bench:
 	$(PYTHON) benchmarks/check_bench.py \
 	  serve_circuits:BENCH_serve.json serve_async:BENCH_serve_async.json \
-	  serve_autoscale:BENCH_serve_autoscale.json
+	  serve_autoscale:BENCH_serve_autoscale.json \
+	  serve_fleet:BENCH_serve_fleet.json
 
 example-serve:
 	$(PYTHON) examples/serve_circuits.py
@@ -53,4 +62,7 @@ example-quickstart:
 example-async:
 	$(PYTHON) examples/serve_async.py
 
-smoke: example-quickstart example-serve example-async
+example-fleet:
+	$(PYTHON) examples/serve_fleet.py
+
+smoke: example-quickstart example-serve example-async example-fleet

@@ -129,6 +129,11 @@ def run(backend: str = "ref", n_tenants: int = 9, qps: float = 150.0,
             # the resulting jit recompiles stall a CPU CI runner far more
             # than they buy
             max_shards=shards + 1,
+            # shards time-share whatever devices the runner exposes (the
+            # benchmark measures plan churn, not device parallelism), so
+            # the topology cap must not veto the scripted trajectory on
+            # a 1-device CI host
+            device_cap=shards + 1,
             # CI runners are noisy; leave headroom/miss growth to real
             # deployments and let imbalance drive the organic trigger
             grow_headroom=0.0, miss_rate_high=0.5,

@@ -80,6 +80,19 @@ class DeadlineScheduler:
     def pending_requests(self) -> int:
         return sum(len(q) for q in self._queues.values())
 
+    def pending_for(self, tenant: str) -> list[Request]:
+        """Unconditionally drain one tenant's queued requests — the
+        migration path: before a tenant's ownership moves to another
+        host, everything already queued here must be served here, so
+        the cutover loses nothing and reorders nothing."""
+        q = self._queues.get(tenant)
+        if q is None:
+            return []
+        batch: list[Request] = []
+        while len(q):
+            batch.extend(q.take(self._qos_for(tenant).max_batch))
+        return batch
+
     def drain_all(self) -> list[Request]:
         """Unconditionally drain every queued request — shutdown path,
         where the only alternatives are serving early or dropping work on

@@ -10,7 +10,11 @@ incrementally recompiled plan through the server's generation-fenced
 land on the new one, and content-hash caching keeps unchanged shards'
 device uploads warm across the swap.
 """
-from repro.serve.autoscale.controller import AutoscaleController, carry_map
+from repro.serve.autoscale.controller import (
+    AutoscaleController,
+    CounterWindow,
+    carry_map,
+)
 from repro.serve.autoscale.policy import (
     AutoscaleDecision,
     AutoscalePolicy,
@@ -20,6 +24,7 @@ from repro.serve.autoscale.policy import (
 
 __all__ = [
     "AutoscaleController",
+    "CounterWindow",
     "AutoscaleDecision",
     "AutoscalePolicy",
     "HysteresisPolicy",

@@ -69,8 +69,13 @@ def carry_map(prev: CompiledPlan, new: CompiledPlan) -> "dict[int, int]":
     }
 
 
-class _Window:
-    """Delta-windows a monotone counter, re-baselining on stats resets."""
+class CounterWindow:
+    """Delta-windows a monotone counter, re-baselining on stats resets.
+
+    Shared telemetry primitive: the autoscale controller windows
+    per-shard/per-tenant row counters with it, and the fleet router
+    windows per-tenant rows across hosts to feed the `FleetPlanner`'s
+    LPT override the *current* load, not the run's whole history."""
 
     def __init__(self):
         self._last: dict = {}
@@ -81,6 +86,9 @@ class _Window:
             last = 0
         self._last[key] = value
         return value - last
+
+
+_Window = CounterWindow  # historical in-module name
 
 
 class AutoscaleController:

@@ -91,10 +91,19 @@ class HysteresisPolicy(AutoscalePolicy):
 
     Any candidate must persist for ``patience`` consecutive steps, and
     no decision fires within ``cooldown_s`` of the last installed swap.
+
+    ``device_cap`` makes the policy topology-aware: grow decisions
+    never target more shards than the host has devices, because an
+    extra shard beyond that point time-shares a device with an existing
+    one — it adds a compile and an upload but no parallelism.  The
+    default (``None``) reads ``len(jax.devices())`` lazily at decide
+    time, so constructing a policy never forces jax platform init;
+    pass an explicit cap to model a different topology (tests do).
     """
 
     min_shards: int = 1
     max_shards: int = 8
+    device_cap: "int | None" = None
     grow_headroom: float = 0.25
     miss_rate_high: float = 0.01
     imbalance_high: float = 1.5
@@ -121,6 +130,11 @@ class HysteresisPolicy(AutoscalePolicy):
                 f"patience must be >= 1 and cooldown_s >= 0, got "
                 f"({self.patience}, {self.cooldown_s})"
             )
+        if self.device_cap is not None and self.device_cap < 1:
+            raise ValueError(
+                f"device_cap must be >= 1 (or None for auto), got "
+                f"{self.device_cap}"
+            )
         self._streak = {"grow": 0, "rebalance": 0, "shrink": 0}
         self._armed = True
         self._last_swap: float | None = None
@@ -143,7 +157,7 @@ class HysteresisPolicy(AutoscalePolicy):
             headroom = 1.0 - t.p99_latency_s / t.min_deadline_s
 
         want, why = "none", ""
-        if t.n_shards < self.max_shards and (
+        if t.n_shards < min(self.max_shards, self._device_cap()) and (
                 t.miss_rate > self.miss_rate_high
                 or headroom < self.grow_headroom):
             want = "grow"
@@ -179,6 +193,16 @@ class HysteresisPolicy(AutoscalePolicy):
             )
         delta = 1 if want == "grow" else -1
         return AutoscaleDecision(want, t.n_shards + delta, why)
+
+    def _device_cap(self) -> int:
+        """Most shards a grow may target: the explicit cap, or the live
+        device count (imported lazily — pure decision tests never touch
+        the jax platform)."""
+        if self.device_cap is not None:
+            return self.device_cap
+        import jax  # deferred: only the auto path needs a platform
+
+        return len(jax.devices())
 
     def notify_swap(self, now: float) -> None:
         self._last_swap = now

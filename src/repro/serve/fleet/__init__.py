@@ -1,0 +1,60 @@
+"""Multi-host fleet serving: the tier above one process.
+
+Everything below this package serves tenants inside a single process —
+`LaunchPlan` places circuits on shards, the deadline front-end places
+launches in time.  This package places *tenants on hosts*:
+
+  * `FleetPlan` / `FleetPlanner` — consistent hashing (stable under
+    membership change) with an LPT override driven by observed per-
+    tenant load (`plan`);
+  * `ServingHost` — one cluster member, a full serving stack behind a
+    flat RPC surface (`host`);
+  * `Transport` seam — `InProcTransport` for deterministic tests/CI,
+    `SocketTransport` + `spawn_host_process` for real runs, one wire
+    codec for both (`transport`);
+  * `FleetRouter` — the routed front-end: proxied submits, host
+    join/leave, zero-lost cross-host migration over the persistence-
+    bundle + generation-fenced `swap_plan` path (`router`);
+  * `Workload` — replayable seeded traces (skew/diurnal/spike) for the
+    cluster load harness (`workload`).
+"""
+from repro.serve.fleet.host import ServingHost, dump_bundle, load_bundle
+from repro.serve.fleet.plan import FleetPlan, FleetPlanner, HashRing
+from repro.serve.fleet.router import FleetRouter, MigrationEvent
+from repro.serve.fleet.transport import (
+    InProcTransport,
+    SocketTransport,
+    Transport,
+    TransportError,
+    serve_socket,
+    spawn_host_process,
+)
+from repro.serve.fleet.workload import (
+    Workload,
+    WorkloadEvent,
+    generate,
+    load_trace,
+    save_trace,
+)
+
+__all__ = [
+    "FleetPlan",
+    "FleetPlanner",
+    "FleetRouter",
+    "HashRing",
+    "InProcTransport",
+    "MigrationEvent",
+    "ServingHost",
+    "SocketTransport",
+    "Transport",
+    "TransportError",
+    "Workload",
+    "WorkloadEvent",
+    "dump_bundle",
+    "generate",
+    "load_bundle",
+    "load_trace",
+    "save_trace",
+    "serve_socket",
+    "spawn_host_process",
+]

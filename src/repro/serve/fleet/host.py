@@ -1,0 +1,285 @@
+"""ServingHost: one cluster member, addressable only through RPCs.
+
+A host owns one `CircuitRegistry` + `CircuitServer` +
+`AsyncCircuitServer` stack and exposes it as a flat
+``handle(method, payload)`` surface — the single entry point both
+transports dispatch into.  Everything a router needs to run a cluster
+is a method here:
+
+  * ``submit`` / ``step`` — serve requests (deadline path / fused
+    synchronous replay path);
+  * ``add_tenant`` / ``remove_tenant`` — tenant arrival and departure,
+    each cutting the live plan over through the generation-fenced
+    `swap_plan` (actions ``migrate_in`` / ``migrate_out`` on the
+    `RebalanceEvent` stream, so migrations are first-class citizens of
+    the same audit trail autoscaling writes);
+  * ``export_tenant`` / ``drain_tenant`` — the migration halves: ship
+    the tenant's npz bundles + QoS out, and serve everything it still
+    has queued *here* before ownership moves, so a cutover loses
+    nothing;
+  * ``stats`` / ``ping`` / ``tenants`` — telemetry the router's
+    planner and the Prometheus exporter read.
+
+Payloads are plain dicts with numpy/bytes leaves (the transport codec's
+domain); no method signature mentions a socket, which is what keeps the
+in-process and subprocess deployments behaviorally identical.
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import tempfile
+import time
+from typing import Callable
+
+import numpy as np
+
+from repro.core.api import ServableCircuit
+from repro.serve.async_frontend.frontend import AsyncCircuitServer
+from repro.serve.circuits.metrics import FrontendStats
+from repro.serve.circuits.registry import CircuitRegistry, TenantQoS
+from repro.serve.circuits.server import CircuitServer, StalePlanError
+from repro.serve.observability.trace import TraceRecorder
+from repro.serve.planning import PlacementPolicy
+
+_SWAP_RETRIES = 8
+
+
+def load_bundle(raw: bytes) -> ServableCircuit:
+    """Rehydrate a `ServableCircuit` from in-flight bundle bytes.
+
+    The npz format is file-shaped, so the bytes touch a temp file for
+    the duration of one `load` — the cost of reusing the persistence
+    format (and its validation) as the migration wire format."""
+    fd, path = tempfile.mkstemp(suffix=".npz")
+    try:
+        with os.fdopen(fd, "wb") as f:
+            f.write(raw)
+        return ServableCircuit.load(path)
+    finally:
+        os.unlink(path)
+
+
+def dump_bundle(circuit: ServableCircuit, backend: str) -> bytes:
+    fd, path = tempfile.mkstemp(suffix=".npz")
+    os.close(fd)
+    try:
+        circuit.save(path, validated_backend=backend)
+        with open(path, "rb") as f:
+            return f.read()
+    finally:
+        os.unlink(path)
+
+
+class ServingHost:
+    """One serving process behind the transport seam."""
+
+    def __init__(
+        self,
+        host_id: str,
+        registry: CircuitRegistry,
+        *,
+        backend: str = "ref",
+        policy: "PlacementPolicy | None" = None,
+        tracer: "TraceRecorder | None" = None,
+        clock: Callable[[], float] = time.monotonic,
+        latency_est_s: float = 0.0,
+    ):
+        self.host_id = host_id
+        self.registry = registry
+        self.server = CircuitServer(
+            registry, backend=backend, policy=policy, tracer=tracer
+        )
+        self.frontend = AsyncCircuitServer(
+            self.server, clock=clock, latency_est_s=latency_est_s
+        )
+        self.tracer = self.server.tracer
+        self.migrations_in = 0
+        self.migrations_out = 0
+        self._started = False
+
+    # -- lifecycle -----------------------------------------------------
+    def start(self) -> "ServingHost":
+        """Start the deadline-driver thread (needed for ``submit``; the
+        fused ``step`` path works without it)."""
+        if not self._started:
+            self.frontend.start()
+            self._started = True
+        return self
+
+    def stop(self) -> None:
+        if self._started:
+            self.frontend.stop(drain=True)
+            self._started = False
+
+    def __enter__(self) -> "ServingHost":
+        return self.start()
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+    # -- plan cutover --------------------------------------------------
+    def _swap(self, action: str, reason: str) -> None:
+        """Recompile the current catalog and install it through the
+        generation-fenced swap, retrying when a concurrent registry
+        mutation outruns the compile."""
+        for _ in range(_SWAP_RETRIES):
+            compiled = self.server.compiler.recompile(
+                self.registry.catalog(), self.server.peek_plan()
+            )
+            try:
+                self.server.swap_plan(compiled, action=action, reason=reason)
+                return
+            except StalePlanError:
+                continue
+        raise StalePlanError(
+            f"host {self.host_id!r}: registry outran {_SWAP_RETRIES} "
+            f"recompile attempts during {action!r}"
+        )
+
+    # -- RPC surface ---------------------------------------------------
+    def handle(self, method: str, payload: dict):
+        """Dispatch one RPC.  Exceptions propagate to the transport,
+        which envelopes them for the wire (socket) or lets them raise
+        in the caller (in-process)."""
+        fn = getattr(self, f"_rpc_{method}", None)
+        if fn is None:
+            raise ValueError(
+                f"host {self.host_id!r}: unknown RPC method {method!r}"
+            )
+        return fn(payload)
+
+    def _rpc_ping(self, payload: dict) -> dict:
+        return {
+            "host_id": self.host_id,
+            "backend": self.server.backend.name,
+            "n_tenants": len(self.registry),
+        }
+
+    def _rpc_tenants(self, payload: dict) -> dict:
+        return {"tenants": sorted(self.registry)}
+
+    def _rpc_stats(self, payload: dict) -> dict:
+        return {
+            "host_id": self.host_id,
+            "server": self.server.stats.report(),
+            "frontend": self.frontend.stats.report(),
+            "queue_rows": self.frontend.scheduler.queue_rows(),
+            "tenant_rows": {
+                t: int(r) for t, r in self.server.stats.tenant_rows.items()
+            },
+            "migrations_in": self.migrations_in,
+            "migrations_out": self.migrations_out,
+        }
+
+    def _rpc_reset_stats(self, payload: dict) -> dict:
+        self.server.reset_stats()
+        self.frontend.stats = FrontendStats(
+            backend=self.server.backend.name
+        )
+        return {"ok": True}
+
+    def _rpc_submit(self, payload: dict) -> dict:
+        """Deadline-path serve: enqueue + block on the future.  The
+        transport's per-host serialization makes this a synchronous RPC;
+        the router restores asynchrony with its own thread pool."""
+        fut = self.frontend.enqueue(
+            payload["tenant"],
+            np.asarray(payload["x"], np.float32),
+            deadline_s=payload.get("deadline_s"),
+        )
+        return {"y": fut.result(timeout=payload.get("timeout_s", 60.0))}
+
+    def _rpc_step(self, payload: dict) -> dict:
+        """Fused synchronous serve: the whole chunk rides one
+        `CircuitServer.step` (one launch per plan shard) — the replay
+        path that makes 10⁵-request traces affordable.  Per-item errors
+        come back as error dicts in position, not a failed RPC."""
+        work = [
+            (str(tenant), np.asarray(x, np.float32))
+            for tenant, x in payload["work"]
+        ]
+        with self.tracer.span(
+            "fleet.host.step", cat="fleet", track=f"host:{self.host_id}",
+            items=len(work), rows=sum(x.shape[0] for _, x in work),
+        ):
+            outs = self.server.step(work)
+        return {"y": [
+            {"error": type(o).__name__, "message": str(o)}
+            if isinstance(o, Exception) else o
+            for o in outs
+        ]}
+
+    def _rpc_add_tenant(self, payload: dict) -> dict:
+        """Install a tenant from its persistence bundles and cut the
+        plan over (action ``migrate_in`` when this is a migration)."""
+        tenant = payload["tenant"]
+        circuits = [load_bundle(raw) for raw in payload["bundles"]]
+        qos = payload.get("qos")
+        self.registry.add_ensemble(
+            tenant, circuits,
+            replace=bool(payload.get("replace", False)),
+            qos=TenantQoS(**qos) if qos else None,
+        )
+        action = payload.get("action", "add")
+        if action == "migrate_in":
+            self.migrations_in += 1
+        self._swap(action, f"tenant {tenant!r} -> {self.host_id}")
+        self.tracer.instant(
+            "fleet.tenant_in", cat="fleet", track=f"host:{self.host_id}",
+            tenant=tenant, members=len(circuits), action=action,
+        )
+        return {"generation": self.registry.generation,
+                "n_tenants": len(self.registry)}
+
+    def _rpc_remove_tenant(self, payload: dict) -> dict:
+        tenant = payload["tenant"]
+        self.registry.remove(tenant)
+        action = payload.get("action", "remove")
+        if action == "migrate_out":
+            self.migrations_out += 1
+        self._swap(action, f"tenant {tenant!r} <- {self.host_id}")
+        self.tracer.instant(
+            "fleet.tenant_out", cat="fleet", track=f"host:{self.host_id}",
+            tenant=tenant, action=action,
+        )
+        return {"generation": self.registry.generation,
+                "n_tenants": len(self.registry)}
+
+    def _rpc_export_tenant(self, payload: dict) -> dict:
+        """The outbound half of a migration: the tenant's member bundles
+        (bit-identical to its registered circuits) plus its QoS pins."""
+        tenant = payload["tenant"]
+        members = self.registry.members(tenant)  # KeyError if unknown
+        backend = self.server.backend.name
+        return {
+            "tenant": tenant,
+            "bundles": [dump_bundle(sc, backend) for sc in members],
+            "qos": dataclasses.asdict(self.registry.qos(tenant)),
+        }
+
+    def _rpc_drain_tenant(self, payload: dict) -> dict:
+        """Serve everything the tenant still has queued *on this host* —
+        called between traffic cutover and removal so no request ever
+        rides a registry the tenant has left."""
+        tenant = payload["tenant"]
+        with self.frontend._lock:
+            reqs = self.frontend.scheduler.pending_for(tenant)
+        if reqs:
+            outs = self.server.step(
+                [(r.tenant_id, r.features) for r in reqs]
+            )
+            done = self.frontend.clock()
+            for req, out in zip(reqs, outs):
+                self.frontend.stats.record_request(
+                    done - req.submitted_at, late=done > req.deadline
+                )
+                if isinstance(out, Exception):
+                    req.future.set_exception(out)
+                else:
+                    req.future.set_result(out)
+        return {"drained": len(reqs)}
+
+    def _rpc_shutdown(self, payload: dict) -> dict:
+        self.stop()
+        return {"ok": True}

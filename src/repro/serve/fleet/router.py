@@ -1,0 +1,514 @@
+"""FleetRouter: the routed front-end over a set of `ServingHost`s.
+
+The router is the only component that sees the whole cluster.  It owns
+the authoritative `FleetPlan` (who serves whom), a transport per host,
+and the migration machinery that moves a tenant between hosts without
+losing a request:
+
+  1. **buffer** — new submits for the tenant park router-side;
+  2. **export** — the source host ships the tenant's npz+JSON bundles
+     and QoS pins (`export_tenant`);
+  3. **install** — the target host rehydrates them and cuts its live
+     plan over through the generation-fenced `swap_plan`
+     (``action="migrate_in"``);
+  4. **drain** — the source host serves everything the tenant still had
+     queued locally (`drain_tenant`), so nothing in flight is stranded;
+  5. **cut over** — the source host drops the tenant
+     (``action="migrate_out"``), the router repoints ownership and
+     replays the parked submits against the new owner.
+
+A submit that races the cutover and lands on the source host after the
+tenant left fails remotely with `KeyError`; the router re-resolves the
+owner and retries, so callers never see the race.  Every migration is
+a `MigrationEvent` plus a ``fleet.migrate`` span on the shared trace
+timeline.
+
+Two serving paths, mirroring the single-host stack:
+
+  * ``submit()`` → `Future`, proxied to the owning host's deadline
+    front-end through a router thread pool (the transport itself is one
+    serial connection per host);
+  * ``replay()`` — the cluster load harness's path: consecutive trace
+    chunks are grouped by owning host and served as one fused ``step``
+    RPC per host per chunk, hosts in parallel.  Results come back in
+    event order, which is what makes the fleet-vs-single-host parity
+    criterion a bitwise array compare.
+"""
+from __future__ import annotations
+
+import dataclasses
+import threading
+import time
+from concurrent.futures import Future, ThreadPoolExecutor
+from typing import Callable, Mapping, Sequence
+
+import numpy as np
+
+from repro.serve.autoscale.controller import CounterWindow
+from repro.serve.fleet.host import dump_bundle
+from repro.serve.fleet.plan import FleetPlan, FleetPlanner, _plan_hash
+from repro.serve.fleet.transport import Transport, _ERROR_TYPES
+from repro.serve.fleet.workload import WorkloadEvent, chunked
+from repro.serve.observability.trace import NULL_TRACER, TraceRecorder
+
+_ROUTE_RETRIES = 5
+
+
+@dataclasses.dataclass(frozen=True)
+class MigrationEvent:
+    """One completed cross-host tenant move (the fleet-level analogue
+    of the server's `RebalanceEvent`)."""
+
+    tenant: str
+    from_host: str
+    to_host: str
+    reason: str
+    drained: int        # requests the source served during the cutover
+    buffered: int       # submits parked router-side and replayed after
+    duration_s: float
+
+
+def _decode_step_item(item):
+    """A ``step`` RPC result item: ndarray, or an error dict → the
+    matching local exception instance (per-item isolation survives the
+    wire)."""
+    if isinstance(item, dict) and "error" in item:
+        exc_cls = _ERROR_TYPES.get(item["error"], RuntimeError)
+        return exc_cls(item.get("message", ""))
+    return np.asarray(item)
+
+
+class FleetRouter:
+    """Routed front-end: one `FleetPlan`, one transport per host."""
+
+    def __init__(
+        self,
+        *,
+        planner: "FleetPlanner | None" = None,
+        tracer: "TraceRecorder | None" = None,
+        clock: Callable[[], float] = time.monotonic,
+        max_workers: int = 8,
+    ):
+        self.planner = planner or FleetPlanner()
+        self.tracer = NULL_TRACER if tracer is None else tracer
+        self.clock = clock
+        self._lock = threading.RLock()
+        self._transports: "dict[str, Transport]" = {}
+        self._owners: "dict[str, str]" = {}     # live routing table
+        self._features: "dict[str, int]" = {}   # tenant → feature width
+        self._plan = FleetPlan(
+            hosts=(), assignment={}, pins={}, generation=0,
+            content_hash=_plan_hash((), {}, {}),
+        )
+        self._migrating: "dict[str, list]" = {}
+        self._pool = ThreadPoolExecutor(
+            max_workers=max_workers, thread_name_prefix="fleet-router"
+        )
+        self.migrations: "list[MigrationEvent]" = []
+        self.requests_routed: "dict[str, int]" = {}
+        self.rows_routed = 0
+        self._load_win = CounterWindow()
+        self._t0 = self.clock()
+
+    # -- membership ----------------------------------------------------
+    @property
+    def hosts(self) -> tuple[str, ...]:
+        with self._lock:
+            return tuple(sorted(self._transports))
+
+    @property
+    def plan(self) -> FleetPlan:
+        with self._lock:
+            return self._plan
+
+    def add_host(self, host_id: str, transport: Transport) -> FleetPlan:
+        """Join a host and rebalance onto it: consistent hashing moves
+        only the tenants the new host now owns, each shipped over with
+        the full zero-lost migration protocol."""
+        pong = transport.call("ping")
+        if pong.get("host_id") != host_id:
+            raise ValueError(
+                f"transport answers as {pong.get('host_id')!r}, "
+                f"expected {host_id!r}"
+            )
+        with self._lock:
+            if host_id in self._transports:
+                raise ValueError(f"host {host_id!r} already joined")
+            self._transports[host_id] = transport
+            self.requests_routed.setdefault(host_id, 0)
+            hosts = tuple(sorted(self._transports))
+            tenants = tuple(self._owners)
+            prev = self._plan
+        target = self.planner.plan(
+            hosts, tenants, prev=prev, generation=prev.generation + 1
+        )
+        self.tracer.instant(
+            "fleet.host_join", cat="fleet", track="router",
+            host=host_id, n_hosts=len(hosts),
+        )
+        return self._transition(target, reason=f"host {host_id!r} joined")
+
+    def remove_host(self, host_id: str) -> FleetPlan:
+        """Leave a host: every tenant it owns migrates out (zero-lost),
+        then the transport closes.  Survivor-to-survivor moves cannot
+        happen — consistent hashing only reassigns the leaver's
+        tenants."""
+        with self._lock:
+            if host_id not in self._transports:
+                raise KeyError(f"unknown host {host_id!r}")
+            if len(self._transports) == 1 and self._owners:
+                raise ValueError(
+                    f"cannot remove last host {host_id!r} while "
+                    f"{len(self._owners)} tenant(s) are registered"
+                )
+            hosts = tuple(sorted(h for h in self._transports
+                                 if h != host_id))
+            tenants = tuple(self._owners)
+            prev = self._plan
+        target = self.planner.plan(
+            hosts, tenants, prev=prev, generation=prev.generation + 1
+        )
+        plan = self._transition(target, reason=f"host {host_id!r} leaving")
+        with self._lock:
+            transport = self._transports.pop(host_id)
+        transport.call("shutdown")
+        transport.close()
+        self.tracer.instant(
+            "fleet.host_leave", cat="fleet", track="router",
+            host=host_id, n_hosts=len(hosts),
+        )
+        return plan
+
+    # -- tenants -------------------------------------------------------
+    def register(self, tenant: str, circuits: Sequence,
+                 qos: "dict | None" = None) -> str:
+        """Register a tenant fleet-wide: the planner picks the owner,
+        the bundles ship over the transport (the same path a migration
+        uses — a registration is a migration from nowhere).  Returns
+        the owning host id."""
+        with self._lock:
+            if not self._transports:
+                raise RuntimeError("no hosts joined; add_host first")
+            if tenant in self._owners:
+                raise ValueError(f"tenant {tenant!r} already registered")
+            hosts = tuple(sorted(self._transports))
+            prev = self._plan
+            tenants = tuple(self._owners) + (tenant,)
+        target = self.planner.plan(
+            hosts, tenants, prev=prev, generation=prev.generation + 1
+        )
+        owner = target.owner(tenant)
+        backend = "ref"
+        with self._lock:
+            transport = self._transports[owner]
+        transport.call("add_tenant", {
+            "tenant": tenant,
+            "bundles": [dump_bundle(sc, backend) for sc in circuits],
+            "qos": qos,
+            "action": "add",
+        })
+        with self._lock:
+            self._owners[tenant] = owner
+            self._features[tenant] = int(circuits[0].encoder.n_features)
+            self._plan = target
+        return owner
+
+    def owner_of(self, tenant: str) -> str:
+        with self._lock:
+            return self._owners[tenant]
+
+    def tenants(self) -> tuple[str, ...]:
+        with self._lock:
+            return tuple(sorted(self._owners))
+
+    # -- serving: deadline path ---------------------------------------
+    def submit(self, tenant: str, x: np.ndarray,
+               *, deadline_s: "float | None" = None) -> Future:
+        """Route one request to the owning host's deadline front-end.
+
+        Returns a `concurrent.futures.Future` resolving to class ids.
+        During a migration of this tenant the request parks router-side
+        and replays against the new owner after the cutover."""
+        with self._lock:
+            if tenant not in self._owners:
+                raise KeyError(f"unknown tenant {tenant!r}")
+        x = np.atleast_2d(np.asarray(x, np.float32))
+        fut: Future = Future()
+        self._dispatch(tenant, x, deadline_s, fut)
+        return fut
+
+    def _dispatch(self, tenant: str, x: np.ndarray,
+                  deadline_s: "float | None", fut: Future) -> None:
+        def run():
+            last_err: "Exception | None" = None
+            for _ in range(_ROUTE_RETRIES):
+                with self._lock:
+                    parked = self._migrating.get(tenant)
+                    if parked is not None:
+                        parked.append((x, deadline_s, fut))
+                        return
+                    owner = self._owners.get(tenant)
+                    transport = (self._transports.get(owner)
+                                 if owner else None)
+                if transport is None:
+                    fut.set_exception(
+                        KeyError(f"unknown tenant {tenant!r}"))
+                    return
+                try:
+                    out = transport.call("submit", {
+                        "tenant": tenant, "x": x,
+                        "deadline_s": deadline_s,
+                    })
+                except KeyError as err:
+                    # raced a cutover: the tenant left this host between
+                    # owner resolution and the RPC — re-resolve and retry
+                    last_err = err
+                    time.sleep(0.005)
+                    continue
+                except Exception as err:  # noqa: BLE001 — fail the future
+                    fut.set_exception(err)
+                    return
+                with self._lock:
+                    self.requests_routed[owner] = (
+                        self.requests_routed.get(owner, 0) + 1
+                    )
+                    self.rows_routed += int(x.shape[0])
+                fut.set_result(np.asarray(out["y"]))
+                return
+            fut.set_exception(last_err or KeyError(tenant))
+
+        self._pool.submit(run)
+
+    # -- serving: fused replay path -----------------------------------
+    def replay(
+        self,
+        events: "Sequence[WorkloadEvent]",
+        *,
+        chunk_size: int = 1024,
+        on_chunk: "Callable[[int, FleetRouter], None] | None" = None,
+    ) -> "list[np.ndarray | Exception]":
+        """Replay a workload trace through the cluster, results in event
+        order.
+
+        Each chunk groups its events by owning host and rides one fused
+        ``step`` RPC per host (hosts in parallel) — the path that makes
+        a 10⁵-request trace affordable, and deterministic: per-item
+        results never depend on scheduler timing.  ``on_chunk`` fires
+        between chunks (chunk index, router) — the load harness's hook
+        for mid-replay migrations and membership churn."""
+        results: "list" = [None] * len(events)
+        base = 0
+        for ci, chunk in enumerate(chunked(events, chunk_size)):
+            with self._lock:
+                groups: "dict[str, list[tuple[int, WorkloadEvent]]]" = {}
+                for off, ev in enumerate(chunk):
+                    owner = self._owners[ev.tenant]
+                    groups.setdefault(owner, []).append((base + off, ev))
+                transports = {h: self._transports[h] for h in groups}
+            with self.tracer.span(
+                "fleet.router.chunk", cat="fleet", track="router",
+                chunk=ci, events=len(chunk), hosts=len(groups),
+            ):
+                futs = {}
+                for host, items in sorted(groups.items()):
+                    work = [
+                        [ev.tenant,
+                         ev.features(self._features[ev.tenant])]
+                        for _, ev in items
+                    ]
+                    futs[host] = self._pool.submit(
+                        transports[host].call, "step", {"work": work}
+                    )
+                for host, items in sorted(groups.items()):
+                    outs = futs[host].result()["y"]
+                    for (idx, ev), item in zip(items, outs):
+                        results[idx] = _decode_step_item(item)
+                    with self._lock:
+                        self.requests_routed[host] = (
+                            self.requests_routed.get(host, 0) + len(items)
+                        )
+                        self.rows_routed += sum(
+                            ev.rows for _, ev in items
+                        )
+            base += len(chunk)
+            if on_chunk is not None:
+                on_chunk(ci, self)
+        return results
+
+    # -- migration -----------------------------------------------------
+    def migrate(self, tenant: str, to_host: str,
+                reason: str = "manual") -> "MigrationEvent | None":
+        """Move one tenant to ``to_host`` with the zero-lost protocol
+        and pin it there (the pin survives replanning).  No-op when the
+        tenant already lives there."""
+        with self._lock:
+            if to_host not in self._transports:
+                raise KeyError(f"unknown host {to_host!r}")
+            from_host = self._owners[tenant]
+            if from_host == to_host:
+                return None
+            prev = self._plan
+            assignment = dict(prev.assignment)
+            pins = dict(prev.pins)
+            assignment[tenant] = pins[tenant] = to_host
+            self._plan = FleetPlan(
+                hosts=prev.hosts, assignment=assignment, pins=pins,
+                generation=prev.generation + 1,
+                content_hash=_plan_hash(prev.hosts, assignment, pins),
+            )
+        return self._transfer(tenant, from_host, to_host, reason)
+
+    def rebalance(self, reason: str = "load") -> "list[MigrationEvent]":
+        """Replan with observed per-tenant loads (the LPT override) and
+        migrate whatever moved.  The load signal is windowed rows per
+        tenant summed across hosts — current traffic, not history."""
+        loads = self.observed_loads()
+        with self._lock:
+            hosts = tuple(sorted(self._transports))
+            tenants = tuple(self._owners)
+            prev = self._plan
+        target = self.planner.plan(
+            hosts, tenants, loads=loads, prev=prev,
+            generation=prev.generation + 1,
+        )
+        before = len(self.migrations)
+        self._transition(target, reason=reason)
+        return self.migrations[before:]
+
+    def _transition(self, target: FleetPlan,
+                    reason: str) -> FleetPlan:
+        """Make the live cluster match ``target``: migrate every tenant
+        whose owner differs, then install the plan."""
+        with self._lock:
+            moves = [
+                (t, self._owners[t], h)
+                for t, h in target.assignment.items()
+                if t in self._owners and self._owners[t] != h
+            ]
+        for tenant, from_host, to_host in moves:
+            self._transfer(tenant, from_host, to_host, reason)
+        with self._lock:
+            self._plan = target
+        return target
+
+    def _transfer(self, tenant: str, from_host: str,
+                  to_host: str, reason: str) -> MigrationEvent:
+        """The zero-lost cutover (see module docstring for the five
+        steps).  Ownership repoints under the router lock only after
+        the target host holds the tenant and the source has drained."""
+        t0 = self.clock()
+        with self._lock:
+            self._migrating[tenant] = []
+            src = self._transports[from_host]
+            dst = self._transports[to_host]
+        with self.tracer.span(
+            "fleet.migrate", cat="fleet", track="router",
+            tenant=tenant, src=from_host, dst=to_host, reason=reason,
+        ):
+            export = src.call("export_tenant", {"tenant": tenant})
+            dst.call("add_tenant", {
+                "tenant": tenant,
+                "bundles": export["bundles"],
+                "qos": export["qos"],
+                "action": "migrate_in",
+            })
+            drained = int(
+                src.call("drain_tenant", {"tenant": tenant})["drained"]
+            )
+            src.call("remove_tenant",
+                     {"tenant": tenant, "action": "migrate_out"})
+            with self._lock:
+                self._owners[tenant] = to_host
+                parked = self._migrating.pop(tenant)
+        event = MigrationEvent(
+            tenant=tenant, from_host=from_host, to_host=to_host,
+            reason=reason, drained=drained, buffered=len(parked),
+            duration_s=self.clock() - t0,
+        )
+        self.migrations.append(event)
+        for x, deadline_s, fut in parked:
+            self._dispatch(tenant, x, deadline_s, fut)
+        return event
+
+    # -- telemetry -----------------------------------------------------
+    def host_stats(self) -> "dict[str, dict]":
+        """One ``stats`` RPC per host (serial; telemetry cadence is not
+        a hot path)."""
+        with self._lock:
+            transports = dict(self._transports)
+        return {h: tr.call("stats") for h, tr in sorted(transports.items())}
+
+    def observed_loads(self) -> "dict[str, float]":
+        """Windowed rows served per tenant since the last call, summed
+        across hosts — the `FleetPlanner`'s LPT input."""
+        totals: "dict[str, float]" = {}
+        for stats in self.host_stats().values():
+            for tenant, rows in stats.get("tenant_rows", {}).items():
+                totals[tenant] = totals.get(tenant, 0.0) + float(rows)
+        return {
+            t: self._load_win.delta(t, total)
+            for t, total in sorted(totals.items())
+        }
+
+    def report(self) -> dict:
+        """Fleet-level snapshot: the Prometheus exporter's ``fleet=``
+        input and the benchmark's record body."""
+        now = self.clock()
+        host_stats = self.host_stats()
+        with self._lock:
+            routed = dict(self.requests_routed)
+            elapsed = max(now - self._t0, 1e-9)
+            router = {
+                "requests_routed": sum(routed.values()),
+                "rows_routed": self.rows_routed,
+                "qps": round(sum(routed.values()) / elapsed, 2),
+                "migrations": len(self.migrations),
+                "n_hosts": len(self._transports),
+                "n_tenants": len(self._owners),
+                "plan_generation": self._plan.generation,
+            }
+        hosts = {}
+        for h, stats in host_stats.items():
+            hosts[h] = {
+                "requests_routed": routed.get(h, 0),
+                "queue_rows": stats.get("queue_rows", 0),
+                "tenants": len(self._plan.tenants_of(h)),
+                "migrations_in": stats.get("migrations_in", 0),
+                "migrations_out": stats.get("migrations_out", 0),
+                "qps": stats.get("server", {}).get("qps", 0.0),
+                "rows_served": sum(
+                    stats.get("tenant_rows", {}).values()
+                ),
+            }
+        return {"router": router, "hosts": hosts}
+
+    def reset_stats(self) -> None:
+        """Zero router counters and every host's stats — benchmark
+        warmup boundary."""
+        with self._lock:
+            transports = dict(self._transports)
+            self.requests_routed = {h: 0 for h in transports}
+            self.rows_routed = 0
+            self._t0 = self.clock()
+        for tr in transports.values():
+            tr.call("reset_stats")
+
+    # -- lifecycle -----------------------------------------------------
+    def close(self, *, shutdown_hosts: bool = True) -> None:
+        with self._lock:
+            transports = dict(self._transports)
+            self._transports.clear()
+        for tr in transports.values():
+            if shutdown_hosts:
+                try:
+                    tr.call("shutdown")
+                except Exception:  # noqa: BLE001 — best-effort teardown
+                    pass
+            tr.close()
+        self._pool.shutdown(wait=True)
+
+    def __enter__(self) -> "FleetRouter":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.close()

@@ -188,10 +188,41 @@ def _prom_lines(prefix: str, report: dict, label: str) -> list[str]:
     return lines
 
 
+def _fleet_lines(fleet, namespace: str) -> list[str]:
+    """Fleet section: router-level gauges plus one ``{host="..."}``
+    labelled series per host per metric, so a scrape sees the whole
+    cluster in one exposition."""
+    report = fleet if isinstance(fleet, dict) else fleet.report()
+    lines: list[str] = []
+    router = report.get("router", {})
+    for key, value in router.items():
+        if isinstance(value, bool) or not isinstance(value, (int, float)):
+            continue
+        name = f"{namespace}_fleet_router_{_prom_name(key)}"
+        lines.append(f"# TYPE {name} gauge")
+        lines.append(f"{name} {value}")
+    hosts = report.get("hosts", {})
+    per_metric: dict[str, list[str]] = {}
+    for host, stats in sorted(hosts.items()):
+        for key, value in stats.items():
+            if isinstance(value, bool) or not isinstance(
+                    value, (int, float)):
+                continue
+            name = f"{namespace}_fleet_host_{_prom_name(key)}"
+            per_metric.setdefault(name, []).append(
+                f'{name}{{host="{_prom_name(str(host))}"}} {value}'
+            )
+    for name, series in per_metric.items():
+        lines.append(f"# TYPE {name} gauge")
+        lines.extend(series)
+    return lines
+
+
 def prometheus_text(
     server_stats=None,
     frontend_stats=None,
     *,
+    fleet=None,
     namespace: str = "repro",
 ) -> str:
     """Text-format metrics snapshot of the serving stack's aggregates.
@@ -200,6 +231,10 @@ def prometheus_text(
     pre-computed ``report()`` dicts) and renders every numeric field as a
     gauge, dict-valued fields (``fire_reasons``, ``shard_occupancy``,
     nested ``phase_breakdown`` maps) as one labelled series per key.
+    ``fleet`` (a `FleetRouter` or its ``report()`` dict) adds the
+    cluster section: ``<ns>_fleet_router_*`` gauges (QPS, migrations,
+    plan generation) and ``<ns>_fleet_host_*`` series labelled by host
+    (queue depth, requests routed, per-host QPS).
     """
     sections: list[str] = []
     for prefix, stats in ((f"{namespace}_server", server_stats),
@@ -218,4 +253,6 @@ def prometheus_text(
             else:
                 flat[k] = v
         sections.extend(_prom_lines(prefix, flat, label))
+    if fleet is not None:
+        sections.extend(_fleet_lines(fleet, namespace))
     return "\n".join(sections) + ("\n" if sections else "")

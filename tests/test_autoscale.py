@@ -334,7 +334,10 @@ def test_policy_rebalance_needs_patience_and_rearm():
 
 
 def test_policy_grow_on_miss_rate_and_headroom():
-    pol = HysteresisPolicy(patience=1, cooldown_s=0.0, max_shards=4)
+    # explicit device_cap: this runner may expose a single device, and
+    # the topology cap would otherwise veto every grow below
+    pol = HysteresisPolicy(patience=1, cooldown_s=0.0, max_shards=4,
+                           device_cap=4)
     d = pol.decide(telemetry(miss_rate=0.05))
     assert d.action == "grow" and d.n_shards == 3
     # p99 eating into the deadline budget also grows
@@ -348,6 +351,39 @@ def test_policy_grow_on_miss_rate_and_headroom():
     ).action == "none"
 
 
+def test_policy_grow_capped_at_device_count():
+    """Topology-aware grow: the policy never targets more shards than
+    the host has devices — an extra shard past that point time-shares a
+    device and buys a compile, not parallelism."""
+    import jax
+
+    # explicit cap: grow is vetoed at the cap even under a hard breach,
+    # while the same telemetry below the cap still grows
+    pol = HysteresisPolicy(patience=1, cooldown_s=0.0, max_shards=8,
+                           device_cap=2)
+    assert pol.decide(telemetry(n_shards=2, miss_rate=0.5)).action == "none"
+    pol2 = HysteresisPolicy(patience=1, cooldown_s=0.0, max_shards=8,
+                            device_cap=3)
+    d = pol2.decide(telemetry(n_shards=2, miss_rate=0.5))
+    assert d.action == "grow" and d.n_shards == 3
+    # the veto only silences grow — an imbalance rebalance (same shard
+    # count) still fires at the cap
+    pol3 = HysteresisPolicy(patience=1, cooldown_s=0.0, device_cap=2)
+    d = pol3.decide(telemetry(
+        n_shards=2, shard_load={0: 500.0, 1: 10.0}))
+    assert d.action == "rebalance"
+    # default (None) resolves to the live device count at decide time
+    n_dev = len(jax.devices())
+    auto = HysteresisPolicy(patience=1, cooldown_s=0.0, max_shards=64)
+    assert auto.decide(
+        telemetry(n_shards=n_dev, miss_rate=0.5,
+                  occupancy={s: 0.1 for s in range(n_dev)},
+                  shard_load={s: 100.0 for s in range(n_dev)})
+    ).action == "none"
+    with pytest.raises(ValueError):
+        HysteresisPolicy(device_cap=0)
+
+
 def test_policy_shrink_only_when_idle_and_safe():
     pol = HysteresisPolicy(patience=1, cooldown_s=0.0, min_shards=1)
     idle = telemetry(occupancy={0: 0.001, 1: 0.001},
@@ -359,7 +395,7 @@ def test_policy_shrink_only_when_idle_and_safe():
 
 
 def test_policy_cooldown_quiets_every_trigger():
-    pol = HysteresisPolicy(patience=1, cooldown_s=10.0)
+    pol = HysteresisPolicy(patience=1, cooldown_s=10.0, device_cap=8)
     pol.notify_swap(100.0)
     assert pol.decide(
         telemetry(miss_rate=1.0, now=105.0)
@@ -448,7 +484,8 @@ def test_soak_churn_swaps_never_lose_requests():
     fe = AsyncCircuitServer(server)
     ctl = AutoscaleController(
         fe, HysteresisPolicy(patience=1, cooldown_s=0.05,
-                             max_shards=4, imbalance_high=1.3),
+                             max_shards=4, device_cap=4,
+                             imbalance_high=1.3),
     )
     circuits = {t: reg.get(t) for t in reg}
     extra = {

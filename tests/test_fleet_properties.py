@@ -1,0 +1,109 @@
+"""Property tests for fleet placement stability (hypothesis).
+
+The contracts the router's churn behavior rests on, proved over random
+memberships instead of the handful of fixed cases in ``test_fleet``:
+
+  * **join stability** — adding a host relocates tenants only *onto*
+    the joiner; no tenant ever moves between two surviving hosts, and
+    the relocated fraction stays near K/n (bounded here generously
+    enough to be hypothesis-stable while still ruling out a rehash of
+    the world);
+  * **leave stability** — removing a host relocates only that host's
+    tenants; everyone else's owner is untouched;
+  * **determinism** — the planner is a pure function: same inputs,
+    byte-identical plan (content hash and all), including under
+    all-equal loads where the LPT override runs purely on tie-breaks.
+
+These run on the pure `HashRing` / `FleetPlanner` decision cores — the
+same objects the live router consults — so no hosts are spun up.
+"""
+import pytest
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings  # noqa: E402
+from hypothesis import strategies as st  # noqa: E402
+
+from repro.serve.fleet import FleetPlanner, HashRing  # noqa: E402
+
+# small vnode count keeps ring construction cheap under many examples;
+# the stability properties hold for any vnodes >= 1
+VNODES = 32
+
+host_names = st.sets(
+    st.text(alphabet="abcdefgh0123456789", min_size=1, max_size=8),
+    min_size=1, max_size=8,
+).map(sorted)
+
+tenant_names = st.sets(
+    st.text(alphabet="tuvwxyz0123456789", min_size=1, max_size=10),
+    min_size=1, max_size=80,
+).map(sorted)
+
+
+@given(hosts=host_names, tenants=tenant_names,
+       joiner=st.text(alphabet="jk0123456789", min_size=1, max_size=8))
+@settings(max_examples=60, deadline=None)
+def test_join_moves_only_to_the_joiner(hosts, tenants, joiner):
+    before = HashRing(hosts, vnodes=VNODES)
+    after = HashRing(list(hosts) + [joiner], vnodes=VNODES)
+    for t in tenants:
+        old, new = before.owner(t), after.owner(t)
+        # a tenant either stays put or moves onto the joiner — never
+        # between two surviving hosts
+        assert new == old or new == joiner
+    if joiner not in hosts and len(hosts) >= 2:
+        moved = sum(1 for t in tenants
+                    if before.owner(t) != after.owner(t))
+        # ~K/n expected; anything near K would mean global rehashing
+        assert moved <= 0.8 * len(tenants)
+
+
+@given(hosts=host_names.filter(lambda h: len(h) >= 2),
+       tenants=tenant_names, leaver_idx=st.integers(0, 7))
+@settings(max_examples=60, deadline=None)
+def test_leave_moves_only_the_leavers_tenants(hosts, tenants, leaver_idx):
+    leaver = hosts[leaver_idx % len(hosts)]
+    before = HashRing(hosts, vnodes=VNODES)
+    after = HashRing([h for h in hosts if h != leaver], vnodes=VNODES)
+    for t in tenants:
+        old, new = before.owner(t), after.owner(t)
+        if old != leaver:
+            # survivors keep every tenant they had
+            assert new == old
+        else:
+            assert new != leaver
+
+
+@given(hosts=host_names, tenants=tenant_names,
+       seed_loads=st.booleans())
+@settings(max_examples=40, deadline=None)
+def test_planner_is_a_pure_function(hosts, tenants, seed_loads):
+    loads = {t: 3.0 for t in tenants} if seed_loads else None
+    a = FleetPlanner(vnodes=VNODES).plan(hosts, tenants, loads=loads)
+    b = FleetPlanner(vnodes=VNODES).plan(hosts, tenants, loads=loads)
+    assert a.assignment == b.assignment
+    assert a.pins == b.pins
+    assert a.content_hash == b.content_hash
+    # completeness: every tenant is assigned, and to a live host
+    assert sorted(a.assignment) == list(tenants)
+    assert set(a.assignment.values()) <= set(hosts)
+
+
+@given(hosts=host_names.filter(lambda h: len(h) >= 2),
+       tenants=tenant_names.filter(lambda t: len(t) >= 4))
+@settings(max_examples=40, deadline=None)
+def test_lpt_override_never_worsens_the_maximum(hosts, tenants):
+    """Whatever the LPT pass does, the most loaded host after the
+    override carries no more than it did before (moves are only ever
+    accepted when they shrink the maximum)."""
+    loads = {t: float(1 + (i % 7)) for i, t in enumerate(tenants)}
+    planner = FleetPlanner(vnodes=VNODES, imbalance_high=1.05)
+    ring_only = planner.plan(hosts, tenants)
+    balanced = planner.plan(hosts, tenants, loads=loads)
+
+    def max_load(plan):
+        return max(
+            sum(loads[t] for t in plan.tenants_of(h)) for h in hosts
+        )
+
+    assert max_load(balanced) <= max_load(ring_only)

@@ -462,3 +462,33 @@ def test_prometheus_text_snapshot():
     fs.record_submitted()
     both = prometheus_text(server_stats=stats, frontend_stats=fs)
     assert 'repro_frontend_submitted{backend="ref"} 1' in both
+
+
+def test_prometheus_text_fleet_section():
+    """The fleet section: router-level gauges plus per-host labelled
+    series, riding the same exposition as server/front-end stats."""
+    fleet_report = {
+        "router": {"requests_routed": 500, "qps": 76.2, "migrations": 2,
+                   "n_hosts": 2, "plan_generation": 7},
+        "hosts": {
+            "h0": {"requests_routed": 303, "queue_rows": 4, "qps": 46.2,
+                   "tenants": 2, "migrations_in": 0, "migrations_out": 1},
+            "h1": {"requests_routed": 197, "queue_rows": 0, "qps": 30.0,
+                   "tenants": 2, "migrations_in": 1, "migrations_out": 0},
+        },
+    }
+    text = prometheus_text(fleet=fleet_report)
+    assert "# TYPE repro_fleet_router_qps gauge" in text
+    assert "repro_fleet_router_qps 76.2" in text
+    assert "repro_fleet_router_migrations 2" in text
+    # per-host series carry a host label, one line per host per metric
+    assert 'repro_fleet_host_queue_rows{host="h0"} 4' in text
+    assert 'repro_fleet_host_queue_rows{host="h1"} 0' in text
+    assert 'repro_fleet_host_requests_routed{host="h0"} 303' in text
+    assert 'repro_fleet_host_migrations_in{host="h1"} 1' in text
+    # fleet + server sections coexist in one exposition
+    stats = ServerStats(backend="ref", clock=FakeClock(0.0, step=0.5))
+    stats.record(_tick())
+    both = prometheus_text(server_stats=stats, fleet=fleet_report)
+    assert 'repro_server_qps{backend="ref"}' in both
+    assert "repro_fleet_router_qps 76.2" in both
