@@ -2,8 +2,8 @@ PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
 .PHONY: test soak-churn lint dev-deps bench-serve bench-async \
-        bench-autoscale bench-fleet check-bench trace-demo example-serve \
-        example-quickstart example-async example-fleet smoke
+        bench-autoscale bench-fleet bench-evolve check-bench trace-demo \
+        example-serve example-quickstart example-async example-fleet smoke
 
 dev-deps:
 	$(PYTHON) -m pip install -r requirements-dev.txt
@@ -39,6 +39,12 @@ bench-fleet:
 	  $(PYTHON) benchmarks/serve_fleet.py \
 	  --workload benchmarks/workloads/fleet_smoke.jsonl.gz --chunk-size 500
 
+# online-evolution drift scenario: covariate shift → detect → background
+# refit → shadow → canary promotion, with the oracle-gap and quiet-loop
+# overhead gates (CI's evolution-smoke invocation)
+bench-evolve:
+	$(PYTHON) benchmarks/serve_evolve.py
+
 # record a full-stack serving trace (request spans + tick phases +
 # autoscale instants on one timeline); open the file at ui.perfetto.dev
 trace-demo:
@@ -51,7 +57,8 @@ check-bench:
 	$(PYTHON) benchmarks/check_bench.py \
 	  serve_circuits:BENCH_serve.json serve_async:BENCH_serve_async.json \
 	  serve_autoscale:BENCH_serve_autoscale.json \
-	  serve_fleet:BENCH_serve_fleet.json
+	  serve_fleet:BENCH_serve_fleet.json \
+	  serve_evolve:BENCH_serve_evolve.json
 
 example-serve:
 	$(PYTHON) examples/serve_circuits.py

@@ -23,6 +23,13 @@ CI runs the serving benchmarks, then this checker.  Two jobs:
      ``CHECK_BENCH_MAX_TRACE_OVERHEAD_PCT`` (default 2%); the
      instrumented-but-disabled path is the benchmarks' normal
      configuration, so its cost is what the QPS tolerance above gates.
+     Records carrying ``evolution_overhead_pct`` (the online-evolution
+     drift scenario) are additionally gated on loop acceptance: zero
+     lost requests, serving continuity during the background refit,
+     ``accuracy_gap`` vs the fresh-fit oracle within
+     ``CHECK_BENCH_MAX_ACCURACY_GAP`` (default 0.02) and quiet-loop
+     overhead within ``CHECK_BENCH_MAX_EVOLUTION_OVERHEAD_PCT``
+     (default 5%).
 
 Only after both pass is the new result copied over the repo-root
 ``BENCH_*.json`` trajectory name (what the workflow uploads as an
@@ -58,6 +65,11 @@ REQUIRED_KEYS = {
     "serve_fleet": ("backend", "qps", "n_hosts", "migrations",
                     "lost_requests", "parity_mismatches",
                     "router.requests_routed"),
+    "serve_evolve": ("backend", "qps", "drift_detected", "refits",
+                     "promotions", "lost_requests", "served_during_refit",
+                     "accuracy_before", "accuracy_after", "oracle_accuracy",
+                     "accuracy_gap", "evolution_overhead_pct",
+                     "promotion_audit"),
 }
 
 # where each benchmark's throughput number lives in a record
@@ -66,6 +78,7 @@ QPS_GETTERS = {
     "serve_async": lambda rec: rec.get("server", {}).get("qps"),
     "serve_autoscale": lambda rec: rec.get("qps"),
     "serve_fleet": lambda rec: rec.get("qps"),
+    "serve_evolve": lambda rec: rec.get("qps"),
 }
 
 DEFAULT_MAX_QPS_DROP = 0.30
@@ -80,6 +93,10 @@ DEFAULT_TOLERANCES = {
     # parity oracle — lots of jit churn relative to its short smoke
     # trace, so its wall-clock QPS is the noisiest of the set
     "serve_fleet": 0.50,
+    # the evolution benchmark's serving loop shares the process with a
+    # background 1+λ search for most of the run — its QPS depends on how
+    # the OS schedules that contention
+    "serve_evolve": 0.50,
 }
 
 # ceiling on `trace_overhead_pct` (the in-process, back-to-back QPS cost
@@ -88,6 +105,14 @@ DEFAULT_TOLERANCES = {
 # path — the benchmarks' normal configuration — is gated by the standard
 # QPS-vs-committed-baseline tolerance above.
 DEFAULT_MAX_TRACE_OVERHEAD_PCT = 2.0
+
+# online-evolution acceptance bounds (serve_evolve records): the closed
+# loop must lose zero requests while refitting in the background, land
+# the promoted circuit within this many accuracy points of a fresh-fit
+# oracle given the same budget, and cost at most this much steady-state
+# QPS when idle
+DEFAULT_MAX_ACCURACY_GAP = 0.02
+DEFAULT_MAX_EVOLUTION_OVERHEAD_PCT = 5.0
 
 
 def _tolerance(name: str) -> float:
@@ -157,6 +182,67 @@ def _gate_trace_overhead(name: str, payload: list) -> None:
             )
 
 
+def _gate_evolution(name: str, payload: list) -> None:
+    """Acceptance gates for online-evolution records (those carrying an
+    ``evolution_overhead_pct`` field; others pass untouched):
+
+      * the closed loop actually closed — drift detected, a background
+        refit completed, a candidate was promoted;
+      * zero requests lost, and serving demonstrably continued while the
+        refit ran (``served_during_refit`` > 0);
+      * ``accuracy_gap`` (fresh-fit oracle minus promoted circuit, on a
+        held-out post-shift test set) within ``CHECK_BENCH_MAX_ACCURACY_GAP``
+        (default 0.02);
+      * ``evolution_overhead_pct`` (steady-state QPS cost of the quiet
+        loop) within ``CHECK_BENCH_MAX_EVOLUTION_OVERHEAD_PCT`` (default
+        5%)."""
+    max_gap = float(os.environ.get("CHECK_BENCH_MAX_ACCURACY_GAP",
+                                   DEFAULT_MAX_ACCURACY_GAP))
+    max_overhead = float(os.environ.get(
+        "CHECK_BENCH_MAX_EVOLUTION_OVERHEAD_PCT",
+        DEFAULT_MAX_EVOLUTION_OVERHEAD_PCT,
+    ))
+    for rec in payload:
+        if rec.get("evolution_overhead_pct") is None:
+            continue
+        be = rec.get("backend")
+        failures = []
+        if not rec.get("drift_detected"):
+            failures.append("the covariate shift was never detected")
+        if not rec.get("refits"):
+            failures.append("no background refit completed")
+        if not rec.get("promotions"):
+            failures.append("no candidate was promoted")
+        if rec.get("lost_requests", 1) != 0:
+            failures.append(f"{rec.get('lost_requests')} requests lost")
+        if not rec.get("served_during_refit"):
+            failures.append("no request served while the refit ran")
+        gap = rec.get("accuracy_gap", 1.0)
+        if gap > max_gap:
+            failures.append(
+                f"accuracy_gap {gap:.4f} vs fresh-fit oracle exceeds "
+                f"{max_gap:.4f} (CHECK_BENCH_MAX_ACCURACY_GAP)"
+            )
+        pct = rec.get("evolution_overhead_pct", 100.0)
+        if pct > max_overhead:
+            failures.append(
+                f"quiet-loop overhead {pct:.2f}% exceeds "
+                f"{max_overhead:.1f}% (CHECK_BENCH_MAX_EVOLUTION_"
+                f"OVERHEAD_PCT)"
+            )
+        verdict = "OK" if not failures else "FAIL"
+        print(f"{name}[{be}]: evolution loop — gap {gap:+.4f} "
+              f"(max {max_gap:.2f}), overhead {pct:.2f}% "
+              f"(max {max_overhead:.1f}%), "
+              f"lost {rec.get('lost_requests')}, "
+              f"promotions {rec.get('promotions')} {verdict}")
+        if failures:
+            raise SystemExit(
+                f"{name}[{be}]: online-evolution gate failed: "
+                + "; ".join(failures)
+            )
+
+
 def _gate_regression(name: str, payload: list, baseline_path: str) -> None:
     """Fail on >tolerance QPS drop vs the committed baseline, per backend."""
     if os.environ.get("CHECK_BENCH_SKIP_REGRESSION") == "1":
@@ -221,6 +307,7 @@ def check_one(name: str, dest: str) -> str:
     payload = _validate(name, src)
     out = os.path.join(REPO_ROOT, dest)
     _gate_trace_overhead(name, payload)
+    _gate_evolution(name, payload)
     _gate_regression(name, payload, out)
     with open(out, "w") as f:
         json.dump(payload, f, indent=1)

@@ -8,12 +8,15 @@ with **zero lost requests**, **at least one cross-host migration**
 mid-replay, and per-request results **bitwise identical** to the same
 trace replayed against a single host.
 
-The migration is organic where possible: a third of the way through the
-replay the harness calls `router.rebalance()`, letting the planner's
-LPT override act on the observed (Zipf-skewed) per-tenant row loads.
-If consistent hashing already balanced the hot tenants — possible for
-small tenant sets — a single scripted `migrate` of the hottest tenant
-keeps the migration path measured (counted separately as ``forced``).
+The migration is organic where possible: a `RebalanceCadence` ticks on
+a virtual clock driven by the trace's own event times (interval = a
+third of the trace duration), so the planner's LPT override acts on the
+observed (Zipf-skewed) per-tenant row loads exactly when an operational
+deployment's periodic rebalancer would — deterministically, because the
+clock is the trace's, not the wall's.  If consistent hashing already
+balanced the hot tenants — possible for small tenant sets — a single
+scripted `migrate` of the hottest tenant keeps the migration path
+measured (counted separately as ``forced``).
 
 Traces are replayable artifacts: ``--workload PATH`` replays a
 committed file (CI's fleet-smoke leg does this), ``--write-trace PATH``
@@ -42,6 +45,7 @@ from repro.serve.circuits import CircuitRegistry
 from repro.serve.fleet import (
     FleetRouter,
     InProcTransport,
+    RebalanceCadence,
     ServingHost,
     Workload,
     generate,
@@ -124,18 +128,23 @@ def run(backend: str = "ref", n_hosts: int = 2, n_tenants: int = 8,
         warm(router, workload, warm_events)
         tracer.clear()  # trace covers the timed window only
 
-        # one rebalance a third of the way in: by then observed_loads
-        # has a real window of the skewed traffic to act on
-        n_chunks = (n_events + chunk_size - 1) // chunk_size
-        rebalance_at = max(n_chunks // 3, 1)
+        # periodic rebalancing on the trace's own clock: the cadence
+        # first comes due a third of the way in, by which point
+        # observed_loads has a real window of the skewed traffic
+        duration = workload.events[-1].t if workload.events else 0.0
+        virtual_now = [0.0]
+        cadence = RebalanceCadence(
+            router, interval_s=max(duration / 3.0, 1e-9),
+            min_rows=chunk_size, clock=lambda: virtual_now[0],
+        )
         forced = 0
 
         def on_chunk(ci: int, r: FleetRouter) -> None:
             nonlocal forced
-            if ci != rebalance_at:
-                return
-            moved = r.rebalance(reason="bench-load")
-            if not moved:
+            last = min((ci + 1) * chunk_size, len(workload.events)) - 1
+            virtual_now[0] = workload.events[last].t
+            moved = cadence.tick()
+            if moved is not None and not moved and not r.migrations:
                 # hashing already balanced the hot tenants; script one
                 # move so the migration path is always measured
                 loads = r.observed_loads()
@@ -184,6 +193,7 @@ def run(backend: str = "ref", n_hosts: int = 2, n_tenants: int = 8,
         "chunk_size": chunk_size,
         "workload_path": workload_path,
         "migrations": len(migrations),
+        "cadence_fires": cadence.fires,
         "forced_migrations": forced,
         "migration_events": migrations,
         "lost_requests": lost,
@@ -265,8 +275,9 @@ def main():
         print(f"--- backend={rep['backend']} ({rep['n_hosts']} hosts, "
               f"{rep['n_tenants']} tenants, {rep['n_events']} events, "
               f"shape={rep['shape']}) ---")
-        for k in ("qps", "rows_per_s", "migrations", "forced_migrations",
-                  "lost_requests", "parity_mismatches", "wall_s"):
+        for k in ("qps", "rows_per_s", "migrations", "cadence_fires",
+                  "forced_migrations", "lost_requests",
+                  "parity_mismatches", "wall_s"):
             print(f"  {k:22s} {rep[k]}")
         for m in rep["migration_events"]:
             print(f"  migrate {m['tenant']:10s} {m['from']}→{m['to']} "

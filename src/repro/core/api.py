@@ -32,7 +32,16 @@ from repro.core.genome import CircuitSpec, Genome, opcodes
 # a single .npz holding the genome/encoder arrays plus a JSON metadata
 # string.  Bump on any incompatible layout change; load() rejects
 # versions it does not know.
-SERVABLE_FORMAT_VERSION = 1
+#
+# Version history:
+#   1 — genome + spec + encoder + class count + validated backend.
+#   2 — adds optional lineage metadata (parent content hash, refit
+#       generation, shadow-window stats, promotion verdict) and the
+#       fit-time per-bit activation frequencies (``enc_ref_stats``) the
+#       online drift detectors baseline against.  v1 bundles still load
+#       (lineage and reference stats simply absent).
+SERVABLE_FORMAT_VERSION = 2
+_SERVABLE_READABLE_VERSIONS = (1, 2)
 SERVABLE_FORMAT_KIND = "tiny-classifier-circuits/servable-circuit"
 
 
@@ -94,12 +103,30 @@ class ServableCircuit:
     genome: Genome
     encoder: E.Encoder
     n_classes: int
+    # -- format v2 provenance (optional, excluded from equality) -------
+    # lineage: who this circuit descends from and how it got promoted —
+    # JSON-serializable dict with keys like ``parent_hash`` (content hash
+    # of the circuit it was refit from), ``refit_generation`` (how many
+    # online refits deep this line is), ``shadow`` (the shadow-window
+    # stats the promotion decision saw) and ``verdict``.  None for
+    # offline fits and v1 bundles.
+    lineage: "dict | None" = dataclasses.field(default=None, compare=False)
+    # ref_stats: fit-time per-bit activation frequencies of the encoded
+    # training data (f32[n_bits_total]) — the reference snapshot the
+    # serving stack's drift detectors compare live traffic against.
+    ref_stats: "np.ndarray | None" = dataclasses.field(
+        default=None, compare=False, repr=False
+    )
 
     def __post_init__(self):
         assert self.spec.n_inputs == self.encoder.n_bits_total, (
             self.spec.n_inputs, self.encoder.n_bits_total,
         )
         assert self.n_classes >= 2
+        if self.ref_stats is not None:
+            assert np.shape(self.ref_stats) == (self.encoder.n_bits_total,), (
+                np.shape(self.ref_stats), self.encoder.n_bits_total,
+            )
 
     @property
     def n_inputs(self) -> int:
@@ -191,18 +218,23 @@ class ServableCircuit:
             },
             "n_classes": int(self.n_classes),
             "validated_backend": be_name,
+            # v2: lineage rides the JSON (it is metadata, not tensors);
+            # json.dumps raises here — not at load — if a caller sneaks
+            # in something non-serializable
+            "lineage": self.lineage,
         }
         if not path.endswith(".npz"):
             path = path + ".npz"
-        np.savez(
-            path,
-            meta=json.dumps(meta),
-            gate_fn=np.asarray(self.genome.gate_fn, np.int32),
-            edge_src=np.asarray(self.genome.edge_src, np.int32),
-            out_src=np.asarray(self.genome.out_src, np.int32),
-            enc_thresholds=np.asarray(self.encoder.thresholds, np.float32),
-            enc_codes=np.asarray(self.encoder.codes, np.uint8),
-        )
+        arrays = {
+            "gate_fn": np.asarray(self.genome.gate_fn, np.int32),
+            "edge_src": np.asarray(self.genome.edge_src, np.int32),
+            "out_src": np.asarray(self.genome.out_src, np.int32),
+            "enc_thresholds": np.asarray(self.encoder.thresholds, np.float32),
+            "enc_codes": np.asarray(self.encoder.codes, np.uint8),
+        }
+        if self.ref_stats is not None:
+            arrays["enc_ref_stats"] = np.asarray(self.ref_stats, np.float32)
+        np.savez(path, meta=json.dumps(meta), **arrays)
         return path
 
     @classmethod
@@ -217,10 +249,11 @@ class ServableCircuit:
                     f"(kind={meta.get('kind')!r})"
                 )
             version = meta.get("format_version")
-            if version != SERVABLE_FORMAT_VERSION:
+            if version not in _SERVABLE_READABLE_VERSIONS:
                 raise ValueError(
                     f"{path}: unsupported bundle format version {version!r} "
-                    f"(this build reads version {SERVABLE_FORMAT_VERSION})"
+                    f"(this build reads versions "
+                    f"{list(_SERVABLE_READABLE_VERSIONS)})"
                 )
             spec = CircuitSpec(
                 n_inputs=meta["spec"]["n_inputs"],
@@ -239,9 +272,16 @@ class ServableCircuit:
                 strategy=meta["encoder"]["strategy"],
                 bits=meta["encoder"]["bits"],
             )
+            # v2 additions; absent from v1 bundles (and optional in v2)
+            ref_stats = (
+                np.asarray(z["enc_ref_stats"], np.float32)
+                if "enc_ref_stats" in z.files else None
+            )
         return cls(
             spec=spec, genome=genome, encoder=encoder,
             n_classes=meta["n_classes"],
+            lineage=meta.get("lineage"),
+            ref_stats=ref_stats,
         )
 
 
@@ -277,6 +317,7 @@ class AutoTinyClassifier:
         self.genome_: Genome | None = None
         self.encoder_: E.Encoder | None = None
         self.n_classes_: int | None = None
+        self.ref_stats_: np.ndarray | None = None
         self.records_: list[FitRecord] = []
 
     # ------------------------------------------------------------------
@@ -311,8 +352,13 @@ class AutoTinyClassifier:
             )
             self.records_.append(rec)
             if best is None or rec.val_fitness > best[0]:
-                best = (rec.val_fitness, spec, final.best, enc)
-        _, self.spec_, self.genome_, self.encoder_ = best
+                # per-bit activation frequency of the encoded training
+                # data: the reference snapshot online drift detection
+                # compares live traffic against (bundle v2 `ref_stats`)
+                best = (rec.val_fitness, spec, final.best, enc,
+                        bits.mean(axis=0).astype(np.float32))
+        (_, self.spec_, self.genome_, self.encoder_,
+         self.ref_stats_) = best
         return self
 
     # ------------------------------------------------------------------
@@ -326,6 +372,7 @@ class AutoTinyClassifier:
         return ServableCircuit(
             spec=self.spec_, genome=self.genome_,
             encoder=self.encoder_, n_classes=self.n_classes_,
+            ref_stats=self.ref_stats_,
         )
 
     def predict(self, x: np.ndarray) -> np.ndarray:

@@ -95,9 +95,17 @@ def _select(key, fits: jax.Array) -> jax.Array:
     return jnp.argmax(jnp.where(fits == m, u, -1.0))
 
 
-def init_state(key: jax.Array, spec: CircuitSpec, eval_fn: BatchEvalFn) -> EvolveState:
+def init_state(
+    key: jax.Array,
+    spec: CircuitSpec,
+    eval_fn: BatchEvalFn,
+    seed_genome: "Genome | None" = None,
+) -> EvolveState:
+    """Initial 1+λ state.  ``seed_genome`` (when given) becomes the first
+    parent instead of a random genome — the warm-start used by online
+    refits that continue evolving a circuit already serving traffic."""
     k_init, key = jax.random.split(key)
-    parent = init_genome(k_init, spec)
+    parent = init_genome(k_init, spec) if seed_genome is None else seed_genome
     ft, fv = eval_fn(_stack1(parent))
     zero = jnp.zeros((), jnp.int32)
     return EvolveState(
@@ -148,10 +156,11 @@ def not_terminated(state: EvolveState, cfg: EvolveConfig) -> jax.Array:
 
 
 def evolve(
-    key: jax.Array, spec: CircuitSpec, cfg: EvolveConfig, eval_fn: BatchEvalFn
+    key: jax.Array, spec: CircuitSpec, cfg: EvolveConfig, eval_fn: BatchEvalFn,
+    seed_genome: "Genome | None" = None,
 ) -> EvolveState:
     """Run to termination (lax.while_loop — early exit, no history)."""
-    state = init_state(key, spec, eval_fn)
+    state = init_state(key, spec, eval_fn, seed_genome=seed_genome)
     return jax.lax.while_loop(
         lambda s: not_terminated(s, cfg),
         lambda s: generation_step(s, spec, cfg, eval_fn),
@@ -183,7 +192,9 @@ def evolve_packed(
     data: PackedDataset,
     mask_train: jax.Array,
     mask_val: jax.Array,
+    seed_genome: "Genome | None" = None,
 ) -> EvolveState:
-    """Convenience: evolve directly on a PackedDataset."""
+    """Convenience: evolve directly on a PackedDataset.  ``seed_genome``
+    warm-starts the search from an existing circuit (online refit)."""
     eval_fn = make_eval_fn(spec, data, mask_train, mask_val, cfg.backend)
-    return evolve(key, spec, cfg, eval_fn)
+    return evolve(key, spec, cfg, eval_fn, seed_genome=seed_genome)

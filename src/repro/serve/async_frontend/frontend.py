@@ -69,6 +69,10 @@ class AsyncCircuitServer:
         self._wake = threading.Event()
         self._stop = threading.Event()
         self._thread: threading.Thread | None = None
+        # online-evolution hookup (attach_evolution): completion
+        # observations + the label-feedback channel route through here
+        self.evolution = None
+        self._seq = 0
 
     def _qos_for(self, tenant: str):
         """Registry QoS, falling back to defaults for tenants removed with
@@ -148,10 +152,16 @@ class AsyncCircuitServer:
         # async (b/.../e) span: the request's lifecycle crosses from this
         # submit thread to the scheduler/driver thread, correlated by id
         trace_id = self.tracer.next_id() if self.tracer.enabled else 0
+        with self._lock:
+            self._seq += 1
+            seq = self._seq
         req = Request(
             tenant_id=tenant, features=x, deadline=float(deadline),
-            future=fut, submitted_at=now, trace_id=trace_id,
+            future=fut, submitted_at=now, trace_id=trace_id, seq=seq,
         )
+        # callers that will submit_feedback later read the id off the
+        # future they already hold
+        fut.request_id = seq
         if trace_id:
             self.tracer.async_begin(
                 "request", trace_id, cat="request", tenant=tenant,
@@ -273,6 +283,32 @@ class AsyncCircuitServer:
                 req.future.set_exception(out)
             else:
                 req.future.set_result(out)
+                if self.evolution is not None:
+                    try:
+                        self.evolution.observe(
+                            req.tenant_id, req.seq, req.features, out
+                        )
+                    except Exception:  # noqa: BLE001 — telemetry must
+                        # never fail a request that already resolved
+                        pass
+
+    # -- online evolution ----------------------------------------------
+    def attach_evolution(self, manager) -> None:
+        """Register an `EvolutionManager`: served requests flow to its
+        completion hook and `submit_feedback` routes to it."""
+        self.evolution = manager
+
+    def submit_feedback(self, tenant: str, request_id: int, labels) -> int:
+        """Deliver late ground truth for a previously served request
+        (``request_id`` is ``future.request_id`` from `enqueue`).
+        Returns the number of labeled rows accepted."""
+        if self.evolution is None:
+            raise RuntimeError(
+                "no EvolutionManager attached — construct one over this "
+                "front-end (it calls attach_evolution) before submitting "
+                "feedback"
+            )
+        return self.evolution.submit_feedback(tenant, request_id, labels)
 
     # -- background driver ---------------------------------------------
     def _run(self) -> None:

@@ -38,6 +38,8 @@ class Request:
     future: Future
     submitted_at: float
     trace_id: int = 0      # async-span correlation id (0 = untraced)
+    seq: int = 0           # front-end request id — the handle late label
+    #                        feedback joins back on (submit_feedback)
 
     @property
     def rows(self) -> int:

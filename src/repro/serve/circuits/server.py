@@ -27,6 +27,7 @@ from __future__ import annotations
 import dataclasses
 import threading
 import time
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -129,6 +130,17 @@ class CircuitServer:
         self._pending: dict[str, list[_Pending]] = {}
         self._results: dict[int, np.ndarray] = {}
         self._next_ticket = 0
+        # shadow slots: tenant → (expected member count, trailing shadow
+        # count).  When a tenant's launched member count matches the
+        # expectation, the trailing members are excluded from the decode
+        # vote and handed to `shadow_hook` instead — how an online-
+        # evolution candidate scores against live traffic inside the
+        # fused launch without touching served output.  Keying on the
+        # expected count makes the exclusion race-free across the
+        # registry mutation that installs/removes the shadow member: a
+        # stale plan simply doesn't match and votes normally.
+        self._shadow: dict[str, tuple[int, int]] = {}
+        self.shadow_hook: "Callable | None" = None
         # compiled-plan cache (generation-tagged) + device-side tensor
         # copies keyed by shard content hash
         self._plan_lock = threading.Lock()
@@ -357,6 +369,29 @@ class CircuitServer:
         )
         return event
 
+    # -- shadow slots (online evolution) -------------------------------
+    def set_shadow(self, tenant: str, n_members: int, n_shadow: int) -> None:
+        """Mark the trailing ``n_shadow`` of the tenant's ``n_members``
+        ensemble members as hidden shadow slots: they launch and decode
+        like any member, but are excluded from the served vote and
+        delivered to ``shadow_hook(tenant, shadow_ids, served_ids)``
+        instead.  The exclusion only applies to launches whose member
+        count equals ``n_members``, so the caller can set this *before*
+        the registry mutation that adds the shadow member — a tick on
+        the pre-mutation plan votes normally."""
+        if not (0 < n_shadow < n_members):
+            raise ValueError(
+                f"need 0 < n_shadow < n_members, got "
+                f"({n_shadow}, {n_members})"
+            )
+        self._shadow[tenant] = (int(n_members), int(n_shadow))
+
+    def clear_shadow(self, tenant: str) -> None:
+        self._shadow.pop(tenant, None)
+
+    def shadow_of(self, tenant: str) -> "tuple[int, int] | None":
+        return self._shadow.get(tenant)
+
     def shard_of(self, tenant: str) -> int:
         """Home shard of a tenant under the current compiled plan (what a
         deadline scheduler keys its per-shard fire times on)."""
@@ -566,9 +601,22 @@ class CircuitServer:
         t1 = perf()
         with tracer.span("tick.decode", cat="tick"):
             for entry in entries:
-                ids = ensemble_vote(
-                    np.stack(entry["member_ids"]), entry["n_classes"]
-                )
+                member_ids = entry["member_ids"]
+                shadow = self._shadow.get(entry["tenant"])
+                n_sh = 0
+                if shadow is not None and shadow[0] == len(member_ids):
+                    n_sh = shadow[1]
+                voted = member_ids[:len(member_ids) - n_sh]
+                ids = ensemble_vote(np.stack(voted), entry["n_classes"])
+                if n_sh and self.shadow_hook is not None:
+                    try:
+                        self.shadow_hook(
+                            entry["tenant"],
+                            member_ids[len(member_ids) - n_sh:], ids,
+                        )
+                    except Exception:  # noqa: BLE001 — a scoring bug
+                        # must never fail the serving path
+                        pass
                 offsets = entry["offsets"]
                 for p, lo, hi in zip(
                         entry["reqs"], offsets[:-1], offsets[1:]):

@@ -16,8 +16,12 @@ launches in time.  This package places *tenants on hosts*:
     join/leave, zero-lost cross-host migration over the persistence-
     bundle + generation-fenced `swap_plan` path (`router`);
   * `Workload` — replayable seeded traces (skew/diurnal/spike) for the
-    cluster load harness (`workload`).
+    cluster load harness (`workload`);
+  * `RebalanceCadence` — periodic load-gated `rebalance()` driven by
+    observed routed rows, replacing scripted mid-replay calls
+    (`cadence`).
 """
+from repro.serve.fleet.cadence import RebalanceCadence
 from repro.serve.fleet.host import ServingHost, dump_bundle, load_bundle
 from repro.serve.fleet.plan import FleetPlan, FleetPlanner, HashRing
 from repro.serve.fleet.router import FleetRouter, MigrationEvent
@@ -44,6 +48,7 @@ __all__ = [
     "HashRing",
     "InProcTransport",
     "MigrationEvent",
+    "RebalanceCadence",
     "ServingHost",
     "SocketTransport",
     "Transport",

@@ -96,6 +96,7 @@ class ServingHost:
         self.tracer = self.server.tracer
         self.migrations_in = 0
         self.migrations_out = 0
+        self.evolution = None  # EvolutionManager, once enabled
         self._started = False
 
     # -- lifecycle -----------------------------------------------------
@@ -111,6 +112,17 @@ class ServingHost:
         if self._started:
             self.frontend.stop(drain=True)
             self._started = False
+        if self.evolution is not None:
+            self.evolution.stop()
+
+    def enable_evolution(self, **kwargs):
+        """Construct this host's `EvolutionManager` (idempotent); kwargs
+        pass through to its constructor (drift=, refit=, policy=, ...)."""
+        if self.evolution is None:
+            from repro.serve.evolution import EvolutionManager
+
+            self.evolution = EvolutionManager(self.frontend, **kwargs)
+        return self.evolution
 
     def __enter__(self) -> "ServingHost":
         return self.start()
@@ -188,7 +200,8 @@ class ServingHost:
             np.asarray(payload["x"], np.float32),
             deadline_s=payload.get("deadline_s"),
         )
-        return {"y": fut.result(timeout=payload.get("timeout_s", 60.0))}
+        return {"y": fut.result(timeout=payload.get("timeout_s", 60.0)),
+                "request_id": fut.request_id}
 
     def _rpc_step(self, payload: dict) -> dict:
         """Fused synchronous serve: the whole chunk rides one
@@ -279,6 +292,47 @@ class ServingHost:
                 else:
                     req.future.set_result(out)
         return {"drained": len(reqs)}
+
+    # -- online evolution ----------------------------------------------
+    def _rpc_evolution_watch(self, payload: dict) -> dict:
+        """Start drift-watching a tenant on this host (enables the
+        evolution loop with default configs on first use)."""
+        mgr = self.enable_evolution(
+            synchronous_refit=bool(payload.get("synchronous_refit", False))
+        )
+        ref = payload.get("reference")
+        mgr.watch(
+            payload["tenant"],
+            reference=None if ref is None else np.asarray(ref, np.float32),
+            accuracy_baseline=payload.get("accuracy_baseline"),
+        )
+        return {"watched": list(mgr.watched())}
+
+    def _rpc_feedback(self, payload: dict) -> dict:
+        """Late ground-truth delivery for a served request (the id the
+        ``submit`` response carried)."""
+        if self.evolution is None:
+            return {"accepted": 0}
+        accepted = self.evolution.submit_feedback(
+            payload["tenant"], int(payload["request_id"]), payload["labels"]
+        )
+        return {"accepted": accepted}
+
+    def _rpc_evolution_step(self, payload: dict) -> dict:
+        """One control-loop iteration (routers drive the cadence)."""
+        if self.evolution is None:
+            return {"enabled": False}
+        summary = self.evolution.step()
+        return {"enabled": True,
+                **{k: [list(v) if isinstance(v, tuple) else v
+                       for v in vals]
+                   for k, vals in summary.items()}}
+
+    def _rpc_evolution_report(self, payload: dict) -> dict:
+        if self.evolution is None:
+            return {"enabled": False}
+        return {"enabled": True, "host_id": self.host_id,
+                **self.evolution.report()}
 
     def _rpc_shutdown(self, payload: dict) -> dict:
         self.stop()

@@ -273,11 +273,55 @@ class FleetRouter:
                         self.requests_routed.get(owner, 0) + 1
                     )
                     self.rows_routed += int(x.shape[0])
+                # the owning host's front-end request id — the handle
+                # late label feedback joins back on (submit_feedback)
+                fut.request_id = out.get("request_id")
                 fut.set_result(np.asarray(out["y"]))
                 return
             fut.set_exception(last_err or KeyError(tenant))
 
         self._pool.submit(run)
+
+    # -- online evolution ----------------------------------------------
+    def submit_feedback(self, tenant: str, request_id: int, labels) -> int:
+        """Deliver late ground truth to the tenant's owning host
+        (``request_id`` from the submit future's ``request_id``).
+        Returns labeled rows accepted — 0 when the request has aged out
+        of the host's cache or ownership moved since it was served."""
+        with self._lock:
+            owner = self._owners.get(tenant)
+            transport = self._transports.get(owner) if owner else None
+        if transport is None:
+            raise KeyError(f"unknown tenant {tenant!r}")
+        out = transport.call("feedback", {
+            "tenant": tenant, "request_id": int(request_id),
+            "labels": np.asarray(labels, np.int64),
+        })
+        return int(out.get("accepted", 0))
+
+    def evolution_watch(self, tenant: str, **payload) -> dict:
+        """Start drift-watching a tenant on its owning host."""
+        with self._lock:
+            owner = self._owners.get(tenant)
+            transport = self._transports.get(owner) if owner else None
+        if transport is None:
+            raise KeyError(f"unknown tenant {tenant!r}")
+        return transport.call(
+            "evolution_watch", {"tenant": tenant, **payload}
+        )
+
+    def evolution_step(self) -> "dict[str, dict]":
+        """Drive one evolution control-loop iteration on every host."""
+        with self._lock:
+            transports = dict(self._transports)
+        return {h: tr.call("evolution_step", {})
+                for h, tr in sorted(transports.items())}
+
+    def evolution_report(self) -> "dict[str, dict]":
+        with self._lock:
+            transports = dict(self._transports)
+        return {h: tr.call("evolution_report", {})
+                for h, tr in sorted(transports.items())}
 
     # -- serving: fused replay path -----------------------------------
     def replay(

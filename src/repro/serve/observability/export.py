@@ -223,6 +223,7 @@ def prometheus_text(
     frontend_stats=None,
     *,
     fleet=None,
+    evolution=None,
     namespace: str = "repro",
 ) -> str:
     """Text-format metrics snapshot of the serving stack's aggregates.
@@ -235,6 +236,10 @@ def prometheus_text(
     cluster section: ``<ns>_fleet_router_*`` gauges (QPS, migrations,
     plan generation) and ``<ns>_fleet_host_*`` series labelled by host
     (queue depth, requests routed, per-host QPS).
+    ``evolution`` (an `EvolutionManager` or its ``report()`` dict) adds
+    the online-evolution section: ``<ns>_evolution_*`` counters (drift
+    triggers, refits, shadows, promotions, rollbacks) and the per-tenant
+    window divergence as a ``key=<tenant>``-labelled series.
     """
     sections: list[str] = []
     for prefix, stats in ((f"{namespace}_server", server_stats),
@@ -255,4 +260,10 @@ def prometheus_text(
         sections.extend(_prom_lines(prefix, flat, label))
     if fleet is not None:
         sections.extend(_fleet_lines(fleet, namespace))
+    if evolution is not None:
+        report = (evolution if isinstance(evolution, dict)
+                  else evolution.report())
+        sections.extend(_prom_lines(
+            f"{namespace}_evolution", report, 'loop="online"'
+        ))
     return "\n".join(sections) + ("\n" if sections else "")

@@ -1,0 +1,579 @@
+"""Online evolution: drift detection, background refit, shadow slots,
+canary promotion, auto-rollback, and the wiring into the front-end,
+the host RPC surface, and the Prometheus exporter.
+
+Everything runs under injected fake clocks and (where a search is
+involved) the synchronous refit mode, so every scenario is
+deterministic: the same traffic produces the same trips, the same
+candidates, the same verdicts.
+"""
+import dataclasses
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core import encoding as E
+from repro.core import gates
+from repro.core.api import ServableCircuit
+from repro.core.evolve import EvolveConfig, evolve, init_state, make_eval_fn
+from repro.core.genome import CircuitSpec, init_genome
+from repro.serve.async_frontend import AsyncCircuitServer
+from repro.serve.circuits import CircuitRegistry, CircuitServer
+from repro.serve.evolution import (
+    DriftConfig,
+    DriftDetector,
+    EvolutionManager,
+    PromotionPolicy,
+    Promoter,
+    RefitConfig,
+    RefitWorker,
+    ReplayBuffer,
+    bit_activation_stats,
+    refit_circuit,
+)
+from repro.serve.fleet import InProcTransport, ServingHost
+from repro.serve.observability import prometheus_text
+from repro.serve.planning import circuit_digest
+
+RNG = np.random.RandomState(0)
+
+
+def make_servable(seed=0, n_feats=5, bits=2, n_nodes=40, n_classes=3,
+                  with_ref=True) -> ServableCircuit:
+    rng = np.random.RandomState(seed)
+    x = rng.randn(200, n_feats).astype(np.float32)
+    enc = E.fit_encoder(x, E.EncodingConfig("quantile", bits))
+    n_out = max(1, int(np.ceil(np.log2(max(n_classes, 2)))))
+    spec = CircuitSpec(enc.n_bits_total, n_nodes, n_out,
+                      gates.FUNCTION_SETS["full"])
+    return ServableCircuit(
+        spec, init_genome(jax.random.key(seed), spec), enc, n_classes,
+        ref_stats=bit_activation_stats(enc, x) if with_ref else None,
+    )
+
+
+def stationary_rows(n, n_feats=5, seed=0):
+    return np.random.RandomState(seed).randn(n, n_feats).astype(np.float32)
+
+
+def shifted_rows(n, n_feats=5, seed=0, shift=2.0):
+    return (np.random.RandomState(seed).randn(n, n_feats) + shift) \
+        .astype(np.float32)
+
+
+# ---------------------------------------------------------------------------
+# DriftDetector
+# ---------------------------------------------------------------------------
+
+def detector_for(sc, **cfg_kw):
+    cfg = DriftConfig(**{"window": 256, "min_rows": 128, **cfg_kw})
+    return DriftDetector(sc.ref_stats, cfg), sc.encoder
+
+
+def test_detector_quiet_on_stationary_traffic():
+    sc = make_servable(1)
+    det, enc = detector_for(sc)
+    for i in range(20):
+        v = det.observe_bits(E.encode(enc, stationary_rows(64, seed=i)))
+    assert not det.drifted and v.reason == ""
+    assert v.divergence < det.cfg.divergence_threshold
+
+
+def test_detector_trips_and_latches_on_covariate_shift():
+    sc = make_servable(2)
+    det, enc = detector_for(sc)
+    det.observe_bits(E.encode(enc, stationary_rows(128, seed=0)))
+    for i in range(8):
+        v = det.observe_bits(E.encode(enc, shifted_rows(64, seed=i)))
+        if det.drifted:
+            break
+    assert det.drifted and det.trigger.reason in ("divergence",
+                                                  "page_hinkley")
+    # latched: healthy traffic afterwards does not clear the trip
+    v = det.observe_bits(E.encode(enc, stationary_rows(64, seed=99)))
+    assert v.drifted and det.drifted
+    det.reset()
+    assert not det.drifted and det.rows_seen == 0
+
+
+def test_detector_page_hinkley_catches_slow_ramp():
+    """A drift that creeps under the direct threshold still accumulates
+    in the Page-Hinkley statistic."""
+    sc = make_servable(3)
+    det, enc = detector_for(sc, divergence_threshold=10.0,  # disable direct
+                            ph_delta=0.005, ph_lambda=0.30)
+    for i in range(60):
+        shift = 0.04 * i  # slow ramp
+        det.observe_bits(E.encode(
+            enc, shifted_rows(32, seed=i, shift=shift)
+        ))
+        if det.drifted:
+            break
+    assert det.drifted and det.trigger.reason == "page_hinkley"
+
+
+def test_detector_accuracy_channel():
+    sc = make_servable(4)
+    cfg = DriftConfig(min_labeled_rows=64, min_accuracy_drop=0.05,
+                      accuracy_halflife=32.0)
+    det = DriftDetector(sc.ref_stats, cfg, accuracy_baseline=0.9)
+    for _ in range(4):
+        v = det.observe_accuracy(29, 32)  # ~0.9: healthy
+    assert not det.drifted
+    for _ in range(8):
+        v = det.observe_accuracy(16, 32)  # 0.5: broken
+    assert det.drifted and v.reason == "accuracy"
+    assert det.accuracy < 0.9 - cfg.min_accuracy_drop
+
+
+def test_detector_validates_inputs():
+    sc = make_servable(5)
+    det, _ = detector_for(sc)
+    with pytest.raises(ValueError, match="expected bits"):
+        det.observe_bits(np.zeros((4, 3), np.uint8))
+    with pytest.raises(ValueError):
+        DriftConfig(window=0)
+    with pytest.raises(ValueError):
+        DriftConfig(divergence_threshold=0.0)
+
+
+# ---------------------------------------------------------------------------
+# ReplayBuffer / refit
+# ---------------------------------------------------------------------------
+
+def test_replay_buffer_bounds_and_snapshot():
+    buf = ReplayBuffer(capacity_rows=100)
+    for i in range(10):
+        buf.extend(np.full((30, 2), i, np.float32),
+                   np.full(30, i % 3, np.int64))
+    assert len(buf) <= 100 + 30  # whole-block eviction overshoots one block
+    x, y = buf.snapshot()
+    assert x.shape[0] == y.shape[0] == len(buf)
+    assert x[-1, 0] == 9  # newest block retained
+    with pytest.raises(ValueError, match="mismatch"):
+        buf.extend(np.zeros((3, 2), np.float32), np.zeros(2, np.int64))
+
+
+def test_refit_is_deterministic_seeded_and_audited():
+    live = make_servable(6)
+    x = shifted_rows(300, seed=1)
+    y = RNG.randint(0, live.n_classes, 300).astype(np.int64)
+    cfg = RefitConfig(max_gens=30, kappa=15)
+    r1 = refit_circuit("t", live, x, y, cfg)
+    r2 = refit_circuit("t", live, x, y, cfg)
+    assert circuit_digest(r1.candidate) == circuit_digest(r2.candidate)
+    assert r1.parent_hash == circuit_digest(live)
+    lin = r1.candidate.lineage
+    assert lin["parent_hash"] == r1.parent_hash
+    assert lin["refit_generation"] == 1 and lin["seeded"]
+    assert r1.candidate.ref_stats is not None
+    # refit-of-a-refit deepens the line
+    r3 = refit_circuit("t", r1.candidate, x, y, cfg, refit_index=1)
+    assert r3.candidate.lineage["refit_generation"] == 2
+    # same bit-width: the candidate drops into the same plan slot shape
+    assert r1.candidate.spec == live.spec
+
+
+def test_refit_worker_rate_limits_and_cancels():
+    live = make_servable(7)
+    buf = ReplayBuffer(1000)
+    buf.extend(stationary_rows(200, seed=3),
+               RNG.randint(0, 3, 200).astype(np.int64))
+    t = [0.0]
+    done = []
+    worker = RefitWorker(
+        RefitConfig(max_gens=10, kappa=5, min_replay_rows=100,
+                    min_interval_s=60.0),
+        clock=lambda: t[0], synchronous=True,
+    )
+    thin = ReplayBuffer(1000)
+    assert not worker.request("t", live, thin, done.append)  # too thin
+    assert worker.request("t", live, buf, done.append)
+    assert len(done) == 1
+    assert not worker.request("t", live, buf, done.append)  # rate-limited
+    t[0] += 61.0
+    assert worker.request("t", live, buf, done.append)
+    assert len(done) == 2
+    # cancelling a tenant with nothing in flight is a no-op
+    assert not worker.cancel("t")
+
+
+def test_refit_worker_background_thread_delivers():
+    live = make_servable(8)
+    buf = ReplayBuffer(1000)
+    buf.extend(stationary_rows(150, seed=4),
+               RNG.randint(0, 3, 150).astype(np.int64))
+    done = []
+    worker = RefitWorker(RefitConfig(max_gens=10, kappa=5,
+                                     min_replay_rows=100))
+    try:
+        assert worker.request("t", live, buf, done.append)
+        assert worker.join(timeout=60.0)
+        assert len(done) == 1 and done[0].tenant == "t"
+    finally:
+        worker.stop()
+
+
+# ---------------------------------------------------------------------------
+# Shadow slots on the server
+# ---------------------------------------------------------------------------
+
+def serving_stack(*tenants):
+    reg = CircuitRegistry()
+    for name, sc in tenants:
+        reg.add(name, sc)
+    return reg, CircuitServer(reg, backend="ref")
+
+
+def test_shadow_member_is_excluded_from_served_vote():
+    parent, cand = make_servable(9), make_servable(10)
+    reg, server = serving_stack(("t", parent))
+    x = stationary_rows(50, seed=5)
+    want = server.predict("t", x)
+
+    seen = []
+    server.shadow_hook = lambda tenant, shadow_ids, served: seen.append(
+        (tenant, np.asarray(shadow_ids[0]), np.asarray(served))
+    )
+    server.set_shadow("t", 2, 1)
+    reg.add_ensemble("t", (parent, cand), replace=True)
+    got = server.predict("t", x)
+    # the candidate rides the launch but never the vote
+    np.testing.assert_array_equal(got, want)
+    (tenant, shadow_ids, served) = seen[-1]
+    assert tenant == "t" and shadow_ids.shape == (50,)
+    np.testing.assert_array_equal(served, want)
+    np.testing.assert_array_equal(shadow_ids, cand.predict(x))
+
+    # promote ordering: registry swap first, exclusion cleared after —
+    # and a member count that no longer matches disarms the exclusion
+    reg.add_ensemble("t", (cand,), replace=True)
+    np.testing.assert_array_equal(server.predict("t", x), cand.predict(x))
+    server.clear_shadow("t")
+    assert server.shadow_of("t") is None
+
+
+def test_set_shadow_validates():
+    _, server = serving_stack(("t", make_servable(11)))
+    with pytest.raises(ValueError):
+        server.set_shadow("t", 1, 1)  # would shadow every member
+    with pytest.raises(ValueError):
+        server.set_shadow("t", 2, 0)
+
+
+# ---------------------------------------------------------------------------
+# Promoter: promote / reject / rollback through the fenced swap
+# ---------------------------------------------------------------------------
+
+def promoter_stack():
+    parent, cand = make_servable(12), make_servable(13)
+    reg, server = serving_stack(("t", parent))
+    t = [0.0]
+    prom = Promoter(server, policy=PromotionPolicy(
+        min_shadow_rows=32, min_labeled_rows=16, min_accuracy_delta=0.0,
+        max_shadow_rows=200,
+    ), clock=lambda: t[0])
+    return reg, server, prom, parent, cand, t
+
+
+def feed_shadow(server, prom, x, labels):
+    """Serve rows (driving the launch hook), then feed labels."""
+    served = server.predict("t", x)
+    prom.scorer.observe_labels("t", x, labels, served)
+    return served
+
+
+def test_promoter_promotes_and_audits():
+    reg, server, prom, parent, cand, t = promoter_stack()
+    gen0 = reg.generation
+    prom.install_shadow("t", cand)
+    assert prom.shadowing("t")
+    assert reg.members("t") == (parent, cand)
+
+    x = stationary_rows(40, seed=6)
+    feed_shadow(server, prom, x, cand.predict(x))  # candidate always right
+    rec = prom.evaluate("t")
+    assert rec is not None and rec.verdict == "promoted"
+    assert reg.members("t") == (reg.get("t"),)
+    live = reg.get("t")
+    assert circuit_digest(dataclasses.replace(live, lineage=None)) \
+        == circuit_digest(cand)
+    assert live.lineage["parent_hash"] == circuit_digest(parent)
+    assert live.lineage["verdict"] == "promoted"
+    assert live.lineage["shadow"]["labeled_rows"] >= 16
+    assert rec.parent_hash == circuit_digest(parent)
+    assert reg.generation > gen0
+    assert server.shadow_of("t") is None
+    # the plan actually serves the candidate now
+    np.testing.assert_array_equal(server.predict("t", x), cand.predict(x))
+
+
+def test_promoter_rejects_weak_candidate():
+    reg, server, prom, parent, cand, t = promoter_stack()
+    prom.install_shadow("t", cand)
+    x = stationary_rows(40, seed=7)
+    # labels == served output → live is always right, candidate only
+    # when it agrees → delta <= 0 → no promote; exhaust the window
+    for i in range(6):
+        xi = stationary_rows(40, seed=10 + i)
+        feed_shadow(server, prom, xi, server.predict("t", xi))
+    rec = prom.evaluate("t")
+    assert rec is not None and rec.verdict == "rejected"
+    assert reg.members("t") == (parent,)
+    assert not prom.shadowing("t")
+    np.testing.assert_array_equal(
+        server.predict("t", x), parent.predict(x)
+    )
+
+
+def test_promoter_rollback_restores_parent_via_swap():
+    reg, server, prom, parent, cand, t = promoter_stack()
+    prom.install_shadow("t", cand)
+    x = stationary_rows(40, seed=8)
+    feed_shadow(server, prom, x, cand.predict(x))
+    assert prom.evaluate("t").verdict == "promoted"
+    gen_after_promote = reg.generation
+
+    rec = prom.rollback("t", reason="canary regression")
+    assert rec.verdict == "rolled_back"
+    assert rec.parent_hash == circuit_digest(parent)
+    assert reg.generation > gen_after_promote  # a real fenced swap ran
+    assert reg.members("t") == (parent,)
+    np.testing.assert_array_equal(
+        server.predict("t", x), parent.predict(x)
+    )
+    # audit trail holds the full story in order
+    assert [r.verdict for r in prom.records] == ["promoted", "rolled_back"]
+
+
+def test_promoter_forget_parent_ends_probation():
+    reg, server, prom, parent, cand, t = promoter_stack()
+    prom.install_shadow("t", cand)
+    x = stationary_rows(40, seed=9)
+    feed_shadow(server, prom, x, cand.predict(x))
+    prom.evaluate("t")
+    prom.forget_parent("t")
+    with pytest.raises(KeyError):
+        prom.rollback("t")
+
+
+# ---------------------------------------------------------------------------
+# EvolutionManager end to end (fake clock, synchronous refit)
+# ---------------------------------------------------------------------------
+
+def manager_stack(**policy_kw):
+    sc = make_servable(20, n_feats=4, n_classes=2, n_nodes=30)
+    reg = CircuitRegistry()
+    reg.add("t", sc)
+    server = CircuitServer(reg, backend="ref")
+    t = [0.0]
+    fe = AsyncCircuitServer(server, clock=lambda: t[0])
+    mgr = EvolutionManager(
+        fe,
+        drift=DriftConfig(window=256, min_rows=128, min_labeled_rows=32,
+                          accuracy_halflife=32.0),
+        refit=RefitConfig(max_gens=20, kappa=10, min_replay_rows=64),
+        policy=PromotionPolicy(**{
+            "min_shadow_rows": 32, "min_labeled_rows": 16,
+            "min_accuracy_delta": -1.0,  # mechanics test: always promote
+            "rollback_margin": 0.2, "rollback_window_rows": 256,
+            **policy_kw,
+        }),
+        synchronous_refit=True,
+    )
+    mgr.watch("t", accuracy_baseline=0.9)
+    return reg, server, fe, mgr, t, sc
+
+
+def serve(fe, t, x, labels=None):
+    fut = fe.enqueue("t", x, deadline_s=10.0)
+    t[0] += 0.01
+    fe.pump(t[0])
+    ids = fut.result(timeout=5)
+    if labels is not None:
+        fe.submit_feedback("t", fut.request_id, labels)
+    return ids, fut.request_id
+
+
+def test_manager_accuracy_drift_to_promotion_and_rollback():
+    reg, server, fe, mgr, t, sc = manager_stack(rollback_margin=0.05)
+    x4 = lambda seed: stationary_rows(64, n_feats=4, seed=seed)
+
+    # healthy: feedback agrees with the served output
+    for i in range(4):
+        ids, _ = serve(fe, t, x4(i))
+        fut = fe.enqueue("t", x4(i), deadline_s=10.0)
+        t[0] += 0.01
+        fe.pump(t[0])
+        fe.submit_feedback("t", fut.request_id, fut.result())
+        mgr.step()
+    assert not mgr.detector("t").drifted
+
+    # drift: labels flip → accuracy EWMA collapses → trip → refit →
+    # shadow → promote (min_accuracy_delta=-1 promotes on mechanics)
+    for i in range(30):
+        ids, rid = serve(fe, t, x4(100 + i))
+        fe.submit_feedback("t", rid, 1 - ids)
+        mgr.step()
+        if mgr.counters["promotions"]:
+            break
+    assert mgr.counters["drift_triggers"] >= 1
+    assert mgr.counters["refits_completed"] >= 1
+    assert mgr.counters["shadows_installed"] >= 1
+    assert mgr.counters["promotions"] == 1
+    promoted = reg.get("t")
+    assert promoted.lineage["verdict"] == "promoted"
+    parent_digest = circuit_digest(sc)
+    assert promoted.lineage["parent_hash"] == parent_digest
+
+    # probation: keep feeding wrong labels → labeled accuracy under the
+    # pre-promotion baseline by > rollback_margin → auto-rollback
+    for i in range(30):
+        ids, rid = serve(fe, t, x4(200 + i))
+        fe.submit_feedback("t", rid, 1 - ids)
+        mgr.step()
+        if mgr.counters["rollbacks"]:
+            break
+    assert mgr.counters["rollbacks"] == 1
+    # the parent is live again, through a real registry swap
+    assert circuit_digest(reg.get("t")) == parent_digest
+    assert [r.verdict for r in mgr.records][-1] == "rolled_back"
+
+
+def test_manager_observe_sampling_thins_only_drift_telemetry():
+    """observe_every=k parks every k-th request for the detector; the
+    feedback join and replay buffer still see every request."""
+    sc = make_servable(22, n_feats=4, n_classes=2, n_nodes=30)
+    reg = CircuitRegistry()
+    reg.add("t", sc)
+    t = [0.0]
+    fe = AsyncCircuitServer(CircuitServer(reg, backend="ref"),
+                            clock=lambda: t[0])
+    mgr = EvolutionManager(fe, observe_every=3, synchronous_refit=True)
+    mgr.watch("t")
+    rows = 8
+    for i in range(6):
+        x = stationary_rows(rows, n_feats=4, seed=40 + i)
+        ids, rid = serve(fe, t, x)
+        assert fe.submit_feedback("t", rid, ids) == rows
+    mgr.step()
+    # requests 0 and 3 sampled for the detector; all 6 labeled+buffered
+    assert mgr.counters["observed_rows"] == 2 * rows
+    assert mgr.detector("t").rows_seen == 2 * rows
+    assert mgr.counters["feedback_rows"] == 6 * rows
+    assert len(mgr._buffers["t"]) == 6 * rows
+    with pytest.raises(ValueError, match="observe_every"):
+        EvolutionManager(fe, observe_every=0)
+    mgr.stop()
+
+
+def test_manager_requires_reference_for_v1_artifacts():
+    sc = make_servable(21, with_ref=False)
+    reg = CircuitRegistry()
+    reg.add("t", sc)
+    fe = AsyncCircuitServer(CircuitServer(reg), clock=lambda: 0.0)
+    mgr = EvolutionManager(fe, synchronous_refit=True)
+    with pytest.raises(ValueError, match="reference"):
+        mgr.watch("t")
+    mgr.watch("t", reference=np.full(sc.encoder.n_bits_total, 0.5))
+    assert "t" in mgr.watched()
+
+
+def test_manager_feedback_joins_by_request_id():
+    reg, server, fe, mgr, t, sc = manager_stack()
+    x = stationary_rows(16, n_feats=4, seed=3)
+    ids, rid = serve(fe, t, x)
+    assert fe.submit_feedback("t", rid, ids) == 16
+    assert fe.submit_feedback("t", rid, ids) == 0  # consumed
+    assert fe.submit_feedback("t", 999_999, ids) == 0  # unknown id
+    with pytest.raises(ValueError, match="labels"):
+        ids2, rid2 = serve(fe, t, x)
+        fe.submit_feedback("t", rid2, ids[:3])
+    assert mgr.counters["feedback_rows"] == 16
+
+
+def test_frontend_without_manager_rejects_feedback():
+    sc = make_servable(22)
+    reg = CircuitRegistry()
+    reg.add("t", sc)
+    fe = AsyncCircuitServer(CircuitServer(reg), clock=lambda: 0.0)
+    with pytest.raises(RuntimeError, match="EvolutionManager"):
+        fe.submit_feedback("t", 1, [0])
+
+
+# ---------------------------------------------------------------------------
+# Host RPC surface + exporter
+# ---------------------------------------------------------------------------
+
+def test_host_evolution_rpcs_end_to_end():
+    sc = make_servable(23, n_feats=4, n_classes=2, n_nodes=30)
+    host = ServingHost("h0", CircuitRegistry(), backend="ref")
+    tr = InProcTransport(host)
+    host.registry.add("t", sc)
+    host.server.swap_plan(
+        host.server.compiler.recompile(host.registry.catalog(),
+                                       host.server.peek_plan()),
+        action="add", reason="test",
+    )
+    host.start()
+    try:
+        out = tr.call("evolution_watch",
+                      {"tenant": "t", "synchronous_refit": True,
+                       "accuracy_baseline": 0.9})
+        assert out["watched"] == ["t"]
+        x = stationary_rows(32, n_feats=4, seed=1)
+        served = tr.call("submit", {"tenant": "t", "x": x,
+                                    "deadline_s": 5.0})
+        assert "request_id" in served
+        fb = tr.call("feedback", {
+            "tenant": "t", "request_id": served["request_id"],
+            "labels": np.asarray(served["y"]),
+        })
+        assert fb["accepted"] == 32
+        step = tr.call("evolution_step", {})
+        assert step["enabled"]
+        rep = tr.call("evolution_report", {})
+        assert rep["enabled"] and rep["watched"] == 1
+        assert rep["feedback_rows"] == 32
+    finally:
+        host.stop()
+
+
+def test_prometheus_evolution_section():
+    reg, server, fe, mgr, t, sc = manager_stack()
+    ids, rid = serve(fe, t, stationary_rows(16, n_feats=4, seed=4))
+    fe.submit_feedback("t", rid, ids)
+    mgr.step()
+    text = prometheus_text(server.stats, fe.stats, evolution=mgr)
+    assert 'repro_evolution_watched{loop="online"} 1' in text
+    assert "repro_evolution_feedback_rows" in text
+    assert 'repro_evolution_divergence{loop="online",key="t"}' in text
+
+
+# ---------------------------------------------------------------------------
+# evolve() warm start
+# ---------------------------------------------------------------------------
+
+def test_init_state_seed_genome_warm_start():
+    sc = make_servable(24)
+    x = stationary_rows(100, seed=5)
+    bits = E.encode(sc.encoder, x)
+    y = RNG.randint(0, sc.n_classes, 100).astype(np.int64)
+    data = E.pack_dataset(bits, y, sc.n_classes, sc.spec.n_outputs)
+    mtr, mva = E.split_masks(100, data.x_words.shape[1], 0.5, seed=0)
+    eval_fn = make_eval_fn(sc.spec, data, mtr, mva, backend="ref")
+    st = init_state(jax.random.key(0), sc.spec, eval_fn,
+                    seed_genome=sc.genome)
+    np.testing.assert_array_equal(np.asarray(st.parent.gate_fn),
+                                  np.asarray(sc.genome.gate_fn))
+    # and the unseeded path still randomizes
+    st2 = init_state(jax.random.key(0), sc.spec, eval_fn)
+    assert not np.array_equal(np.asarray(st2.parent.gate_fn),
+                              np.asarray(sc.genome.gate_fn))
+    # a short seeded run can only improve on the seed's fitness
+    final = evolve(jax.random.key(1), sc.spec,
+                   EvolveConfig(lam=2, max_gens=5, kappa=3, backend="ref"),
+                   eval_fn, seed_genome=sc.genome)
+    _, seed_val = eval_fn(jax.tree.map(lambda a: a[None], sc.genome))
+    assert float(final.best_val) >= float(seed_val[0])

@@ -1,6 +1,7 @@
 """Versioned ServableCircuit bundles + registry directory persistence:
 save→load→predict must be bit-identical, bad bundles must be rejected,
 and a serving fleet must restart from disk without refitting."""
+import dataclasses
 import json
 
 import jax
@@ -89,6 +90,82 @@ def test_load_rejects_future_version_and_wrong_kind(tmp_path):
                          kind="something-else")
     with pytest.raises(ValueError, match="not a ServableCircuit"):
         ServableCircuit.load(bad_k)
+
+
+# ---------------------------------------------------------------------------
+# Format v2: lineage + fit-time reference stats
+# ---------------------------------------------------------------------------
+
+def test_v2_lineage_and_ref_stats_roundtrip(tmp_path):
+    sc = make_servable(seed=3)
+    lineage = {"parent_hash": "a" * 64, "refit_generation": 2,
+               "verdict": "promoted",
+               "shadow": {"rows": 512, "accuracy_delta": 0.031}}
+    ref = RNG.rand(sc.encoder.n_bits_total).astype(np.float32)
+    sc2 = dataclasses.replace(sc, lineage=lineage, ref_stats=ref)
+    path = sc2.save(str(tmp_path / "v2.npz"))
+
+    meta = read_servable_meta(path)
+    assert meta["format_version"] == SERVABLE_FORMAT_VERSION == 2
+    assert meta["lineage"] == lineage  # audit trail readable without load
+
+    loaded = ServableCircuit.load(path)
+    assert loaded.lineage == lineage
+    np.testing.assert_array_equal(loaded.ref_stats, ref)
+    x = RNG.randn(19, sc.encoder.n_features).astype(np.float32)
+    np.testing.assert_array_equal(loaded.predict(x), sc.predict(x))
+
+
+def test_v2_fields_are_optional_and_excluded_from_equality(tmp_path):
+    sc = make_servable(seed=4)  # no lineage, no ref_stats
+    loaded = ServableCircuit.load(sc.save(str(tmp_path / "plain.npz")))
+    assert loaded.lineage is None and loaded.ref_stats is None
+    # provenance never changes circuit identity
+    assert dataclasses.replace(
+        sc, lineage={"refit_generation": 1},
+        ref_stats=np.zeros(sc.encoder.n_bits_total, np.float32),
+    ) == sc
+
+
+def test_v1_bundles_still_load(tmp_path):
+    """Backward compatibility: a pre-lineage bundle (format v1, no
+    lineage key, no enc_ref_stats array) loads and serves identically."""
+    sc = make_servable(seed=5)
+    path = sc.save(str(tmp_path / "modern.npz"))
+    with np.load(path, allow_pickle=False) as z:
+        arrays = {k: z[k] for k in z.files
+                  if k not in ("meta", "enc_ref_stats")}
+        meta = json.loads(str(z["meta"]))
+    meta["format_version"] = 1
+    meta.pop("lineage", None)
+    v1 = str(tmp_path / "legacy.npz")
+    np.savez(v1, meta=json.dumps(meta), **arrays)
+
+    loaded = ServableCircuit.load(v1)
+    assert loaded.lineage is None and loaded.ref_stats is None
+    x = RNG.randn(13, sc.encoder.n_features).astype(np.float32)
+    np.testing.assert_array_equal(loaded.predict(x), sc.predict(x))
+
+
+def test_autofit_artifact_carries_ref_stats(tmp_path):
+    from repro.core.api import AutoTinyClassifier
+    from repro.core import encoding as Enc
+
+    rng = np.random.RandomState(7)
+    x = rng.randn(120, 4).astype(np.float32)
+    y = (x[:, 0] > 0).astype(np.int64)
+    clf = AutoTinyClassifier(
+        n_gates=30, max_gens=40, kappa=20,
+        encodings=[Enc.EncodingConfig("quantize", 2)],
+    ).fit(x, y)
+    sc = clf.to_servable()
+    assert sc.ref_stats is not None
+    np.testing.assert_allclose(
+        sc.ref_stats,
+        Enc.encode(sc.encoder, x).mean(axis=0).astype(np.float32),
+    )
+    loaded = ServableCircuit.load(sc.save(str(tmp_path / "fit.npz")))
+    np.testing.assert_array_equal(loaded.ref_stats, sc.ref_stats)
 
 
 # ---------------------------------------------------------------------------
