@@ -1,8 +1,9 @@
 PYTHON ?= python
 export PYTHONPATH := src$(if $(PYTHONPATH),:$(PYTHONPATH))
 
-.PHONY: test soak-churn lint dev-deps bench-serve bench-async \
-        bench-autoscale bench-fleet bench-evolve check-bench trace-demo \
+.PHONY: test soak-churn lint clean dev-deps bench-serve bench-async \
+        bench-autoscale bench-fleet bench-evolve bench-coldstart \
+        check-bench trace-demo \
         example-serve example-quickstart example-async example-fleet smoke
 
 dev-deps:
@@ -21,6 +22,19 @@ soak-churn:
 
 lint:
 	$(PYTHON) -m ruff check .
+	@tracked=$$(git ls-files '*.pyc' '*__pycache__*'); \
+	if [ -n "$$tracked" ]; then \
+	  echo "tracked bytecode (run 'make clean' and git rm):"; \
+	  echo "$$tracked"; exit 1; \
+	fi
+
+# scrub python bytecode from the source tree (stale .pyc files shadow
+# renamed modules and must never be committed — lint enforces that)
+clean:
+	find src tests benchmarks examples -name __pycache__ -type d \
+	  -prune -exec rm -rf {} + 2>/dev/null; \
+	find src tests benchmarks examples -name '*.pyc' -delete \
+	  2>/dev/null; true
 
 bench-serve:
 	$(PYTHON) benchmarks/serve_circuits.py
@@ -45,6 +59,12 @@ bench-fleet:
 bench-evolve:
 	$(PYTHON) benchmarks/serve_evolve.py
 
+# AOT cold start: export a warm fleet, boot fresh subprocesses from the
+# artifact vs trace-from-scratch, measure host-ready speedup + the
+# pre-warmed plan-swap dip (CI's coldstart-smoke invocation)
+bench-coldstart:
+	$(PYTHON) benchmarks/serve_coldstart.py
+
 # record a full-stack serving trace (request spans + tick phases +
 # autoscale instants on one timeline); open the file at ui.perfetto.dev
 trace-demo:
@@ -58,7 +78,8 @@ check-bench:
 	  serve_circuits:BENCH_serve.json serve_async:BENCH_serve_async.json \
 	  serve_autoscale:BENCH_serve_autoscale.json \
 	  serve_fleet:BENCH_serve_fleet.json \
-	  serve_evolve:BENCH_serve_evolve.json
+	  serve_evolve:BENCH_serve_evolve.json \
+	  serve_coldstart:BENCH_serve_aot.json
 
 example-serve:
 	$(PYTHON) examples/serve_circuits.py

@@ -29,7 +29,11 @@ CI runs the serving benchmarks, then this checker.  Two jobs:
      ``accuracy_gap`` vs the fresh-fit oracle within
      ``CHECK_BENCH_MAX_ACCURACY_GAP`` (default 0.02) and quiet-loop
      overhead within ``CHECK_BENCH_MAX_EVOLUTION_OVERHEAD_PCT``
-     (default 5%).
+     (default 5%).  Records carrying ``boot_speedup`` (the AOT
+     cold-start benchmark) are additionally gated on zero artifact-boot
+     jit traces, bitwise parity with the warm host,
+     ``CHECK_BENCH_MIN_BOOT_SPEEDUP`` (default 10x) and
+     ``CHECK_BENCH_MAX_POSTSWAP_RATIO`` (default 1.5).
 
 Only after both pass is the new result copied over the repo-root
 ``BENCH_*.json`` trajectory name (what the workflow uploads as an
@@ -70,6 +74,11 @@ REQUIRED_KEYS = {
                      "accuracy_before", "accuracy_after", "oracle_accuracy",
                      "accuracy_gap", "evolution_overhead_pct",
                      "promotion_audit"),
+    "serve_coldstart": ("backend", "boot_speedup", "host_ready_scratch_s",
+                        "host_ready_artifact_s", "cold_traces_artifact",
+                        "cold_traces_scratch", "parity_ok",
+                        "executables_exported", "steady_p50_tick_ms",
+                        "postswap_first_tick_ms", "postswap_ratio"),
 }
 
 # where each benchmark's throughput number lives in a record
@@ -79,6 +88,9 @@ QPS_GETTERS = {
     "serve_autoscale": lambda rec: rec.get("qps"),
     "serve_fleet": lambda rec: rec.get("qps"),
     "serve_evolve": lambda rec: rec.get("qps"),
+    # no QPS here: the trajectory number is how much faster an artifact
+    # boot is than trace-from-scratch (higher is better, like QPS)
+    "serve_coldstart": lambda rec: rec.get("boot_speedup"),
 }
 
 DEFAULT_MAX_QPS_DROP = 0.30
@@ -97,6 +109,10 @@ DEFAULT_TOLERANCES = {
     # background 1+λ search for most of the run — its QPS depends on how
     # the OS schedules that contention
     "serve_evolve": 0.50,
+    # the cold-start "QPS" is a ratio of two subprocess wall times, both
+    # at the mercy of runner scheduling; the absolute floor is gated by
+    # CHECK_BENCH_MIN_BOOT_SPEEDUP regardless of the trajectory
+    "serve_coldstart": 0.50,
 }
 
 # ceiling on `trace_overhead_pct` (the in-process, back-to-back QPS cost
@@ -113,6 +129,14 @@ DEFAULT_MAX_TRACE_OVERHEAD_PCT = 2.0
 # QPS when idle
 DEFAULT_MAX_ACCURACY_GAP = 0.02
 DEFAULT_MAX_EVOLUTION_OVERHEAD_PCT = 5.0
+
+# AOT cold-start acceptance bounds (serve_coldstart records): booting
+# from a `FleetArtifact` must be at least this many times faster to
+# ready than tracing from scratch, with zero jit traces and bitwise
+# parity; the first tick after a pre-warmed plan swap must land within
+# this factor of where the swapped plan's latency settles
+DEFAULT_MIN_BOOT_SPEEDUP = 10.0
+DEFAULT_MAX_POSTSWAP_RATIO = 1.5
 
 
 def _tolerance(name: str) -> float:
@@ -243,6 +267,58 @@ def _gate_evolution(name: str, payload: list) -> None:
             )
 
 
+def _gate_coldstart(name: str, payload: list) -> None:
+    """Acceptance gates for AOT cold-start records (those carrying a
+    ``boot_speedup`` field; others pass untouched):
+
+      * the artifact boot ran **zero** jit traces and its answers match
+        the scratch boot and the warm exporter bitwise (``parity_ok``);
+      * ``boot_speedup`` (scratch host-ready time / artifact host-ready
+        time) at least ``CHECK_BENCH_MIN_BOOT_SPEEDUP`` (default 10);
+      * ``postswap_ratio`` (first tick after a pre-warmed swap vs the
+        swapped plan's settled p50) within
+        ``CHECK_BENCH_MAX_POSTSWAP_RATIO`` (default 1.5)."""
+    min_speedup = float(os.environ.get("CHECK_BENCH_MIN_BOOT_SPEEDUP",
+                                       DEFAULT_MIN_BOOT_SPEEDUP))
+    max_ratio = float(os.environ.get("CHECK_BENCH_MAX_POSTSWAP_RATIO",
+                                     DEFAULT_MAX_POSTSWAP_RATIO))
+    for rec in payload:
+        speedup = rec.get("boot_speedup")
+        if speedup is None:
+            continue
+        be = rec.get("backend")
+        failures = []
+        if rec.get("cold_traces_artifact", 1) != 0:
+            failures.append(
+                f"artifact boot traced "
+                f"{rec.get('cold_traces_artifact')} time(s): "
+                f"{rec.get('artifact_trace_tags')}"
+            )
+        if not rec.get("parity_ok"):
+            failures.append("cold-boot answers diverged from the warm host")
+        if speedup < min_speedup:
+            failures.append(
+                f"boot_speedup {speedup:.2f}x below {min_speedup:.1f}x "
+                f"(CHECK_BENCH_MIN_BOOT_SPEEDUP)"
+            )
+        ratio = rec.get("postswap_ratio", float("inf"))
+        if ratio > max_ratio:
+            failures.append(
+                f"postswap_ratio {ratio:.2f} exceeds {max_ratio:.2f} "
+                f"(CHECK_BENCH_MAX_POSTSWAP_RATIO)"
+            )
+        verdict = "OK" if not failures else "FAIL"
+        print(f"{name}[{be}]: cold start — speedup {speedup:.2f}x "
+              f"(min {min_speedup:.1f}x), "
+              f"traces {rec.get('cold_traces_artifact')}, "
+              f"postswap {ratio:.2f} (max {max_ratio:.2f}) {verdict}")
+        if failures:
+            raise SystemExit(
+                f"{name}[{be}]: cold-start gate failed: "
+                + "; ".join(failures)
+            )
+
+
 def _gate_regression(name: str, payload: list, baseline_path: str) -> None:
     """Fail on >tolerance QPS drop vs the committed baseline, per backend."""
     if os.environ.get("CHECK_BENCH_SKIP_REGRESSION") == "1":
@@ -308,6 +384,7 @@ def check_one(name: str, dest: str) -> str:
     out = os.path.join(REPO_ROOT, dest)
     _gate_trace_overhead(name, payload)
     _gate_evolution(name, payload)
+    _gate_coldstart(name, payload)
     _gate_regression(name, payload, out)
     with open(out, "w") as f:
         json.dump(payload, f, indent=1)

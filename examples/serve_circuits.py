@@ -4,19 +4,20 @@ them as on-disk artifacts, and boot a server **from the artifacts alone**
 
 The flow mirrors a deployment: each dataset stands in for a customer
 scenario (its own feature width, encoding, and class count); the evolved
-circuit is exported with `to_servable()` and saved as a versioned
-npz+JSON bundle (`CircuitRegistry.save_dir`).  Serving then starts from
-`CircuitRegistry.load_dir` — no fitted classifier objects, no `fit()`
-call — and the `CircuitServer` micro-batches every tenant's requests
-into a single `eval_population_spans` launch per tick through the
-configured execution backend.  At the end one tenant is hot-swapped to
-show generation-tagged recompilation.
+circuit is exported with `to_servable()` and persisted into a versioned
+content-addressed `ArtifactStore` (manifest.json + objects/).  Serving
+then starts from `ArtifactStore.load_registry` — no fitted classifier
+objects, no `fit()` call — and the `CircuitServer` micro-batches every
+tenant's requests into a single `eval_population_spans` launch per tick
+through the configured execution backend.  At the end one tenant is
+hot-swapped to show generation-tagged recompilation.
 
     PYTHONPATH=src python examples/serve_circuits.py [--artifacts DIR]
 
-With ``--artifacts DIR`` pointing at a directory that already holds
-``*.circuit.npz`` bundles (a previous run), fitting is skipped entirely:
-the server boots straight from disk.
+With ``--artifacts DIR`` pointing at a directory that already holds a
+store (or a legacy flat directory of ``*.circuit.npz`` bundles from an
+older run), fitting is skipped entirely: the server boots straight from
+disk.
 """
 import argparse
 import os
@@ -30,7 +31,12 @@ import numpy as np
 from repro.core.api import AutoTinyClassifier
 from repro.core.encoding import EncodingConfig
 from repro.data import load_dataset, train_test_split
-from repro.serve.circuits import BUNDLE_SUFFIX, CircuitRegistry, CircuitServer
+from repro.serve.artifacts import (
+    ArtifactStore,
+    CIRCUIT_SUFFIX,
+    load_legacy_registry_dir,
+)
+from repro.serve.circuits import CircuitRegistry, CircuitServer
 from repro.serve.observability import (
     TraceRecorder,
     export_chrome,
@@ -62,30 +68,34 @@ def build_artifacts(artifact_dir: str):
     staging = CircuitRegistry()
     for name in TENANTS:
         staging.add(name, fit_tenant(name).to_servable())
-    written = staging.save_dir(artifact_dir)
+    written = ArtifactStore(artifact_dir).put_registry(staging)
     print(f"  wrote {len(written)} artifact bundles to {artifact_dir}")
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--artifacts", default=None,
-                    help="artifact directory; if it already holds "
-                         f"*{BUNDLE_SUFFIX} bundles, fitting is skipped")
+                    help="artifact directory; if it already holds a store "
+                         f"(or legacy *{CIRCUIT_SUFFIX} bundles), fitting "
+                         "is skipped")
     ap.add_argument("--trace", default=None, metavar="PATH",
                     help="record the serving run and write a Chrome-trace/"
                          "Perfetto JSON (open at https://ui.perfetto.dev)")
     args = ap.parse_args()
 
     artifact_dir = args.artifacts or tempfile.mkdtemp(prefix="circuits-")
-    have = (os.path.isdir(artifact_dir)
-            and any(f.endswith(BUNDLE_SUFFIX) for f in os.listdir(artifact_dir)))
+    is_store = ArtifactStore.is_store(artifact_dir)
+    legacy = (not is_store and os.path.isdir(artifact_dir) and any(
+        f.endswith(CIRCUIT_SUFFIX) for f in os.listdir(artifact_dir)))
+    have = is_store or legacy
     if have:
         print(f"reusing artifact bundles in {artifact_dir} (no fitting)")
     else:
         build_artifacts(artifact_dir)
 
     # --- fleet restart: everything below runs from disk, no fit() ------
-    registry = CircuitRegistry.load_dir(artifact_dir)
+    registry = (load_legacy_registry_dir(artifact_dir) if legacy
+                else ArtifactStore(artifact_dir).load_registry())
     tracer = TraceRecorder(enabled=bool(args.trace))
     server = CircuitServer(registry, tracer=tracer)
     print(f"\nbooted server from {len(registry)} on-disk artifacts "

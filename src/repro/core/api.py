@@ -15,6 +15,7 @@ from __future__ import annotations
 
 import dataclasses
 import json
+import warnings
 from typing import Sequence
 
 import jax
@@ -194,95 +195,127 @@ class ServableCircuit:
         self, path: str, *,
         validated_backend: "str | runtime.EvalBackend" = "ref",
     ) -> str:
-        """Write the artifact as a versioned npz+JSON bundle.
-
-        The bundle carries everything `load` needs to serve raw float
-        features — genome arrays, circuit spec (incl. the opcode
-        function set), fitted encoder parameters, class count — plus a
-        format version and the name of the backend the artifact was
-        validated on.  Returns the path written (np.savez appends
-        ``.npz`` when missing)."""
-        be_name = runtime.resolve_backend(validated_backend).name
-        meta = {
-            "kind": SERVABLE_FORMAT_KIND,
-            "format_version": SERVABLE_FORMAT_VERSION,
-            "spec": {
-                "n_inputs": int(self.spec.n_inputs),
-                "n_nodes": int(self.spec.n_nodes),
-                "n_outputs": int(self.spec.n_outputs),
-                "fn_set": [int(op) for op in self.spec.fn_set],
-            },
-            "encoder": {
-                "strategy": self.encoder.strategy,
-                "bits": int(self.encoder.bits),
-            },
-            "n_classes": int(self.n_classes),
-            "validated_backend": be_name,
-            # v2: lineage rides the JSON (it is metadata, not tensors);
-            # json.dumps raises here — not at load — if a caller sneaks
-            # in something non-serializable
-            "lineage": self.lineage,
-        }
-        if not path.endswith(".npz"):
-            path = path + ".npz"
-        arrays = {
-            "gate_fn": np.asarray(self.genome.gate_fn, np.int32),
-            "edge_src": np.asarray(self.genome.edge_src, np.int32),
-            "out_src": np.asarray(self.genome.out_src, np.int32),
-            "enc_thresholds": np.asarray(self.encoder.thresholds, np.float32),
-            "enc_codes": np.asarray(self.encoder.codes, np.uint8),
-        }
-        if self.ref_stats is not None:
-            arrays["enc_ref_stats"] = np.asarray(self.ref_stats, np.float32)
-        np.savez(path, meta=json.dumps(meta), **arrays)
-        return path
+        """Deprecated alias of `save_servable` — one more release, then
+        gone.  Prefer `save_servable(sc, path)` for single bundles, or an
+        `repro.serve.artifacts.ArtifactStore` for anything fleet-shaped
+        (content-addressed objects, one manifest, executables)."""
+        warnings.warn(
+            "ServableCircuit.save() is deprecated; use "
+            "repro.core.api.save_servable(circuit, path) or an "
+            "repro.serve.artifacts.ArtifactStore",
+            DeprecationWarning, stacklevel=2,
+        )
+        return save_servable(self, path, validated_backend=validated_backend)
 
     @classmethod
     def load(cls, path: str) -> "ServableCircuit":
-        """Load a bundle written by `save`; predictions are bit-identical
-        to the artifact that was saved."""
-        with np.load(path, allow_pickle=False) as z:
-            meta = json.loads(str(z["meta"]))
-            if meta.get("kind") != SERVABLE_FORMAT_KIND:
-                raise ValueError(
-                    f"{path}: not a ServableCircuit bundle "
-                    f"(kind={meta.get('kind')!r})"
-                )
-            version = meta.get("format_version")
-            if version not in _SERVABLE_READABLE_VERSIONS:
-                raise ValueError(
-                    f"{path}: unsupported bundle format version {version!r} "
-                    f"(this build reads versions "
-                    f"{list(_SERVABLE_READABLE_VERSIONS)})"
-                )
-            spec = CircuitSpec(
-                n_inputs=meta["spec"]["n_inputs"],
-                n_nodes=meta["spec"]["n_nodes"],
-                n_outputs=meta["spec"]["n_outputs"],
-                fn_set=tuple(meta["spec"]["fn_set"]),
-            )
-            genome = Genome(
-                gate_fn=jnp.asarray(z["gate_fn"], jnp.int32),
-                edge_src=jnp.asarray(z["edge_src"], jnp.int32),
-                out_src=jnp.asarray(z["out_src"], jnp.int32),
-            )
-            encoder = E.Encoder(
-                thresholds=np.asarray(z["enc_thresholds"], np.float32),
-                codes=np.asarray(z["enc_codes"], np.uint8),
-                strategy=meta["encoder"]["strategy"],
-                bits=meta["encoder"]["bits"],
-            )
-            # v2 additions; absent from v1 bundles (and optional in v2)
-            ref_stats = (
-                np.asarray(z["enc_ref_stats"], np.float32)
-                if "enc_ref_stats" in z.files else None
-            )
-        return cls(
-            spec=spec, genome=genome, encoder=encoder,
-            n_classes=meta["n_classes"],
-            lineage=meta.get("lineage"),
-            ref_stats=ref_stats,
+        """Deprecated alias of `load_servable` — one more release, then
+        gone."""
+        warnings.warn(
+            "ServableCircuit.load() is deprecated; use "
+            "repro.core.api.load_servable(path) or an "
+            "repro.serve.artifacts.ArtifactStore",
+            DeprecationWarning, stacklevel=2,
         )
+        return load_servable(path)
+
+
+def save_servable(
+    circuit: ServableCircuit, path: str, *,
+    validated_backend: "str | runtime.EvalBackend" = "ref",
+) -> str:
+    """Write a `ServableCircuit` as a versioned npz+JSON bundle.
+
+    The bundle carries everything `load_servable` needs to serve raw
+    float features — genome arrays, circuit spec (incl. the opcode
+    function set), fitted encoder parameters, class count — plus a
+    format version and the name of the backend the artifact was
+    validated on.  Returns the path written (np.savez appends ``.npz``
+    when missing).  This is the one canonical bundle writer; the
+    registry/fleet persistence layers (`repro.serve.artifacts`) delegate
+    here so every circuit on disk shares one format.
+    """
+    be_name = runtime.resolve_backend(validated_backend).name
+    meta = {
+        "kind": SERVABLE_FORMAT_KIND,
+        "format_version": SERVABLE_FORMAT_VERSION,
+        "spec": {
+            "n_inputs": int(circuit.spec.n_inputs),
+            "n_nodes": int(circuit.spec.n_nodes),
+            "n_outputs": int(circuit.spec.n_outputs),
+            "fn_set": [int(op) for op in circuit.spec.fn_set],
+        },
+        "encoder": {
+            "strategy": circuit.encoder.strategy,
+            "bits": int(circuit.encoder.bits),
+        },
+        "n_classes": int(circuit.n_classes),
+        "validated_backend": be_name,
+        # v2: lineage rides the JSON (it is metadata, not tensors);
+        # json.dumps raises here — not at load — if a caller sneaks
+        # in something non-serializable
+        "lineage": circuit.lineage,
+    }
+    if not path.endswith(".npz"):
+        path = path + ".npz"
+    arrays = {
+        "gate_fn": np.asarray(circuit.genome.gate_fn, np.int32),
+        "edge_src": np.asarray(circuit.genome.edge_src, np.int32),
+        "out_src": np.asarray(circuit.genome.out_src, np.int32),
+        "enc_thresholds": np.asarray(circuit.encoder.thresholds, np.float32),
+        "enc_codes": np.asarray(circuit.encoder.codes, np.uint8),
+    }
+    if circuit.ref_stats is not None:
+        arrays["enc_ref_stats"] = np.asarray(circuit.ref_stats, np.float32)
+    np.savez(path, meta=json.dumps(meta), **arrays)
+    return path
+
+
+def load_servable(path: str) -> ServableCircuit:
+    """Load a bundle written by `save_servable`; predictions are
+    bit-identical to the artifact that was saved."""
+    with np.load(path, allow_pickle=False) as z:
+        meta = json.loads(str(z["meta"]))
+        if meta.get("kind") != SERVABLE_FORMAT_KIND:
+            raise ValueError(
+                f"{path}: not a ServableCircuit bundle "
+                f"(kind={meta.get('kind')!r})"
+            )
+        version = meta.get("format_version")
+        if version not in _SERVABLE_READABLE_VERSIONS:
+            raise ValueError(
+                f"{path}: unsupported bundle format version {version!r} "
+                f"(this build reads versions "
+                f"{list(_SERVABLE_READABLE_VERSIONS)})"
+            )
+        spec = CircuitSpec(
+            n_inputs=meta["spec"]["n_inputs"],
+            n_nodes=meta["spec"]["n_nodes"],
+            n_outputs=meta["spec"]["n_outputs"],
+            fn_set=tuple(meta["spec"]["fn_set"]),
+        )
+        genome = Genome(
+            gate_fn=jnp.asarray(z["gate_fn"], jnp.int32),
+            edge_src=jnp.asarray(z["edge_src"], jnp.int32),
+            out_src=jnp.asarray(z["out_src"], jnp.int32),
+        )
+        encoder = E.Encoder(
+            thresholds=np.asarray(z["enc_thresholds"], np.float32),
+            codes=np.asarray(z["enc_codes"], np.uint8),
+            strategy=meta["encoder"]["strategy"],
+            bits=meta["encoder"]["bits"],
+        )
+        # v2 additions; absent from v1 bundles (and optional in v2)
+        ref_stats = (
+            np.asarray(z["enc_ref_stats"], np.float32)
+            if "enc_ref_stats" in z.files else None
+        )
+    return ServableCircuit(
+        spec=spec, genome=genome, encoder=encoder,
+        n_classes=meta["n_classes"],
+        lineage=meta.get("lineage"),
+        ref_stats=ref_stats,
+    )
 
 
 class AutoTinyClassifier:

@@ -18,7 +18,22 @@ Registered backends:
 
 Third parties can `register_backend("name", factory)` to add paths
 (e.g. a Triton lowering) without touching core/serve code.
+
+Backends that declare ``supports_aot`` additionally expose
+`EvalBackend.compile_spans` — ahead-of-time compilation of the fused
+span launch into a serializable executable (`repro.runtime.aot`), the
+substrate of the serving tier's artifact boot path.
 """
+from repro.runtime.aot import (  # noqa: F401
+    SpanLaunchSpec,
+    compile_span_launch,
+    deserialize_executable,
+    executable_key,
+    reset_trace_count,
+    serialize_executable,
+    trace_count,
+    trace_tags,
+)
 from repro.runtime.base import (  # noqa: F401
     BackendCapabilities,
     BackendCapabilityError,
@@ -44,9 +59,16 @@ __all__ = [
     "PallasBackend",
     "PallasGpuBackend",
     "RefBackend",
+    "SpanLaunchSpec",
     "UnknownBackendError",
     "available_backends",
+    "compile_span_launch",
+    "deserialize_executable",
+    "executable_key",
     "get_backend",
     "register_backend",
-    "resolve_backend",
+    "reset_trace_count",
+    "serialize_executable",
+    "trace_count",
+    "trace_tags",
 ]

@@ -1,0 +1,210 @@
+"""Ahead-of-time compilation of the fused span launch.
+
+The serving tick's hot path is one `eval_population_spans` launch per
+plan shard.  Today that launch is re-traced and re-compiled by XLA on
+every cold host start and after every plan swap that introduces a new
+(shard shape, span bucket) pair.  This module makes the launch a
+build-time artifact instead:
+
+  * `span_launch_fn` closes the *whole* per-tick device program — the
+    slot gather, the liveness mask, and the backend span kernel — over a
+    static ``span_words``, so one compiled executable covers one
+    (shard shape, span bucket) cell with no eager host work left inside;
+  * `compile_span_launch` lowers it with `jax.jit(...).lower(...).
+    compile()` for a `SpanLaunchSpec` (the shard's static shape tuple);
+  * `serialize_executable` / `deserialize_executable` round-trip the
+    compiled executable through bytes (jax's executable serialization),
+    so a `FleetArtifact` can ship it and a fresh host can load it with
+    **zero tracing**.
+
+Treedefs are *reconstructed* at load, not pickled: the launch signature
+is fixed (``N_LAUNCH_ARGS`` flat array arguments, one array out), so the
+payload stays a plain bytes blob with no pickle trust boundary beyond
+what jax itself requires.
+
+Trace accounting: every traced entry point in this repo bumps a
+process-wide counter *inside* the traced body — Python side effects run
+only at trace time, so the counter counts actual (re)traces, not calls.
+Cold-boot tests assert it stays at zero when serving from artifacts.
+"""
+from __future__ import annotations
+
+import threading
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+# number of flat array arguments of the compiled span launch; load-time
+# treedef reconstruction depends on this staying in sync with
+# `span_launch_fn`'s signature.
+N_LAUNCH_ARGS = 8
+
+AOT_FORMAT = "xla-serialized-executable"
+AOT_FORMAT_VERSION = 1
+
+# --------------------------------------------------------------------------
+# trace accounting
+# --------------------------------------------------------------------------
+
+_trace_lock = threading.Lock()
+_trace_count = 0
+_trace_tags: list[str] = []
+
+
+def note_trace(tag: str) -> None:
+    """Record one jit trace.  Call from *inside* a traced function body —
+    the side effect runs at trace time only, so this counts retraces."""
+    global _trace_count
+    with _trace_lock:
+        _trace_count += 1
+        _trace_tags.append(tag)
+
+
+def trace_count() -> int:
+    """Process-wide count of instrumented jit traces since the last reset."""
+    return _trace_count
+
+
+def trace_tags() -> tuple[str, ...]:
+    """Tags of every instrumented trace since the last reset (debugging)."""
+    with _trace_lock:
+        return tuple(_trace_tags)
+
+
+def reset_trace_count() -> None:
+    global _trace_count
+    with _trace_lock:
+        _trace_count = 0
+        _trace_tags.clear()
+
+
+# --------------------------------------------------------------------------
+# the launch unit
+# --------------------------------------------------------------------------
+
+
+class SpanLaunchSpec(NamedTuple):
+    """Static shape tuple of one shard's fused span launch.
+
+    One compiled executable per distinct spec per backend: ``n_slots`` is
+    the stacked-tensor slot axis (the shard's padded slot count),
+    ``k_pad`` the launch slot axis (equal to ``n_slots`` under the
+    server's stable-shapes policy), and ``span_words`` the power-of-2,
+    alignment-rounded word bucket of the tick.
+    """
+
+    n_slots: int     # S: stacked genome tensors' slot axis
+    k_pad: int       # K: launch slot axis (== n_slots when shapes are stable)
+    n_nodes: int     # n: padded gate count per slot
+    n_outputs: int   # O: padded output count per slot
+    n_inputs: int    # I: padded input-row count of the fused x buffer
+    span_words: int  # static span bucket (words per launch slot)
+
+    @property
+    def x_words(self) -> int:
+        """Word width of the fused input buffer: one span per launch slot."""
+        return self.k_pad * self.span_words
+
+
+def span_launch_fn(backend, span_words: int):
+    """The complete per-tick device program for one shard, as a unit jax
+    can AOT-compile: gather the launch slots out of the stacked genome
+    tensors, mask dead slots via ``live``, and run the backend span
+    kernel.  Keeping the gather *inside* the compiled unit is what lets
+    the tick call a serialized executable with raw device arrays and no
+    eager jnp work at all.
+
+    Signature (all arrays; dtypes fixed so the x64 leg cannot drift)::
+
+        f(opcodes  i32[S, n],
+          edge_src i32[S, n, 2],
+          out_src  i32[S, O],
+          in_width i32[S],
+          slots    i32[K],
+          x_words  u32[I, K * span_words],
+          word_off i32[K],
+          live     i32[K]) -> u32[K, O, span_words]
+    """
+
+    def launch(opcodes, edge_src, out_src, in_width, slots, x_words,
+               word_off, live):
+        note_trace(f"{backend.name}.span_launch/s{span_words}")
+        return backend.eval_population_spans(
+            opcodes[slots],
+            edge_src[slots],
+            out_src[slots],
+            x_words,
+            word_off,
+            in_width[slots] * live,
+            span_words=span_words,
+        )
+
+    return launch
+
+
+def launch_arg_shapes(spec: SpanLaunchSpec, device=None):
+    """`jax.ShapeDtypeStruct` tuple matching `span_launch_fn`'s signature."""
+    kw = {}
+    if device is not None:
+        kw["sharding"] = jax.sharding.SingleDeviceSharding(device)
+    s, k, n, o, i, _ = spec
+    return (
+        jax.ShapeDtypeStruct((s, n), jnp.int32, **kw),
+        jax.ShapeDtypeStruct((s, n, 2), jnp.int32, **kw),
+        jax.ShapeDtypeStruct((s, o), jnp.int32, **kw),
+        jax.ShapeDtypeStruct((s,), jnp.int32, **kw),
+        jax.ShapeDtypeStruct((k,), jnp.int32, **kw),
+        jax.ShapeDtypeStruct((i, spec.x_words), jnp.uint32, **kw),
+        jax.ShapeDtypeStruct((k,), jnp.int32, **kw),
+        jax.ShapeDtypeStruct((k,), jnp.int32, **kw),
+    )
+
+
+def compile_span_launch(backend, spec: SpanLaunchSpec, *, device=None):
+    """AOT-compile one shard's span launch: ``jit(f).lower(shapes)
+    .compile()``.  Tracing happens here, once, at export/prewarm time —
+    the returned `jax.stages.Compiled` executes with zero further traces.
+    """
+    lowered = jax.jit(span_launch_fn(backend, spec.span_words)).lower(
+        *launch_arg_shapes(spec, device=device)
+    )
+    return lowered.compile()
+
+
+# --------------------------------------------------------------------------
+# executable (de)serialization
+# --------------------------------------------------------------------------
+
+
+def serialize_executable(compiled) -> bytes:
+    """Serialize a compiled span launch to a portable bytes payload.
+
+    Only the payload is kept: the in/out treedefs are a fixed property of
+    the launch signature and are reconstructed at load time, so nothing
+    structural needs to ride in the artifact."""
+    from jax.experimental import serialize_executable as _ser
+
+    payload, _in_tree, _out_tree = _ser.serialize(compiled)
+    return payload
+
+
+def deserialize_executable(payload: bytes):
+    """Load a serialized span launch: **no tracing, no XLA compilation** —
+    the executable binds straight to the runtime.  Raises on payloads
+    compiled for an incompatible runtime/device; callers treat any
+    exception as "fall back to trace-on-boot" and log the reason."""
+    from jax.experimental import serialize_executable as _ser
+
+    in_tree = jax.tree_util.tree_structure(((0,) * N_LAUNCH_ARGS, {}))
+    out_tree = jax.tree_util.tree_structure(0)
+    return _ser.deserialize_and_load(payload, in_tree, out_tree)
+
+
+def executable_key(backend_name: str, content_hash: str, span_words: int) -> str:
+    """Content-addressed cache key of one compiled span launch:
+    ``(backend, shard content hash, span bucket)``.  The shard hash
+    already pins the stacked-tensor shapes and slot contents, and
+    ``span_words`` pins the launch bucket, so equal keys mean the same
+    executable byte-for-byte inputs."""
+    return f"{backend_name}--{content_hash}--s{int(span_words)}"

@@ -14,6 +14,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.kernels import circuit_eval, ref
+from repro.runtime import aot
 from repro.runtime.base import (
     BackendCapabilities,
     BackendCapabilityError,
@@ -30,6 +31,9 @@ def _on_tpu() -> bool:
 @functools.partial(jax.jit, static_argnames=("span_words",))
 def _spans_ref(opcodes, edge_src, out_src, x_words, word_off, in_width,
                span_words):
+    # trace-time side effect only: counts actual (re)traces of the eager
+    # serving launch so cold-boot tests can assert "zero tracing"
+    aot.note_trace(f"ref.spans/s{span_words}")
     return ref.eval_population_spans_packed(
         opcodes, edge_src, out_src, x_words, word_off, in_width,
         span_words=span_words,
@@ -90,6 +94,9 @@ class PallasBackend(EvalBackend):
             supports_spans=True,
             word_alignment=circuit_eval.LANE,
             span_offset_contract="word_off entries must be multiples of span_words",
+            supports_aot=True,
+            aot_format=aot.AOT_FORMAT,
+            aot_format_version=aot.AOT_FORMAT_VERSION,
         )
 
     def pick_block_words(

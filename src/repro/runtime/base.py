@@ -39,6 +39,15 @@ class BackendCapabilities:
     the alignment constraint on ``word_off`` entries for the spans entry
     point.  ``implemented`` is False for reserved registry slots whose
     eval entry points raise `BackendCapabilityError`.
+
+    ``supports_aot`` declares whether `compile_spans` can produce a
+    serializable ahead-of-time executable for the fused span launch;
+    ``aot_format``/``aot_format_version`` name the serialization format
+    so artifact stores can reject payloads they cannot load.  AOT
+    availability is a *declared* capability, not something callers probe
+    with try/except — a backend that says False (e.g. ``"ref"``, kept
+    eager so it stays the readable oracle) is served via the traced
+    fallback path, with the reason logged.
     """
 
     name: str
@@ -47,6 +56,9 @@ class BackendCapabilities:
     word_alignment: int
     span_offset_contract: str = "none"
     implemented: bool = True
+    supports_aot: bool = False
+    aot_format: str = ""
+    aot_format_version: int = 0
 
 
 class EvalBackend(abc.ABC):
@@ -99,6 +111,31 @@ class EvalBackend(abc.ABC):
             opcodes[None], edge_src[None], out_src[None], x_words
         )
         return out[0]
+
+    def compile_spans(self, spec, *, device=None):
+        """Ahead-of-time compile the fused span launch for one shard shape.
+
+        ``spec`` is a `repro.runtime.aot.SpanLaunchSpec` (the shard's
+        static shape tuple plus the span bucket); the returned
+        `jax.stages.Compiled` executes the complete per-tick device
+        program — slot gather, liveness mask, span kernel — with zero
+        further tracing, and round-trips through
+        `repro.runtime.aot.serialize_executable`.
+
+        Availability is declared by ``capabilities().supports_aot``;
+        backends that declare False raise `BackendCapabilityError` here
+        and are served via the traced fallback path instead.
+        """
+        caps = self.capabilities()
+        if not caps.supports_aot:
+            raise BackendCapabilityError(
+                f"backend {self.name!r} declares supports_aot=False: the "
+                "fused span launch cannot be compiled ahead of time; serve "
+                "it via the traced path (trace-on-boot fallback)."
+            )
+        from repro.runtime import aot
+
+        return aot.compile_span_launch(self, spec, device=device)
 
     def instrument(self, hook) -> "EvalBackend":
         """Wrap this backend so every ``eval_*`` launch runs inside a
@@ -161,6 +198,12 @@ class _InstrumentedBackend(EvalBackend):
 
     def span_alignment(self, requested: int | None = None) -> int:
         return self._inner.span_alignment(requested)
+
+    def compile_spans(self, spec, *, device=None):
+        # compilation is a control-plane step, not a launch: delegate
+        # uninstrumented; the serving tick wraps *execution* of the
+        # compiled launch in its own span.
+        return self._inner.compile_spans(spec, device=device)
 
     def eval_population(self, opcodes, edge_src, out_src, x_words):
         with self._hook("eval_population", population=int(opcodes.shape[0]),

@@ -1,0 +1,32 @@
+"""Versioned on-disk artifacts for the serving stack.
+
+`ArtifactStore` is the single persistence surface: content-addressed
+circuit bundles, serialized ahead-of-time executables, and one JSON
+manifest naming them (tenants, QoS, executable provenance, an optional
+whole-fleet description).  The older per-object APIs
+(`ServableCircuit.save/load`, `CircuitRegistry.save_dir/load_dir`)
+delegate here and are deprecated.
+
+See `repro.serve.fleet.FleetArtifact` for the fleet-level bundle built
+on top of this store, and `repro.runtime.aot` for what the stored
+executables actually are.
+"""
+from repro.serve.artifacts.store import (  # noqa: F401
+    ArtifactStore,
+    CIRCUIT_SUFFIX,
+    EXECUTABLE_SUFFIX,
+    MANIFEST_NAME,
+    STORE_FORMAT_VERSION,
+    STORE_KIND,
+    load_legacy_registry_dir,
+)
+
+__all__ = [
+    "ArtifactStore",
+    "CIRCUIT_SUFFIX",
+    "EXECUTABLE_SUFFIX",
+    "MANIFEST_NAME",
+    "STORE_FORMAT_VERSION",
+    "STORE_KIND",
+    "load_legacy_registry_dir",
+]

@@ -16,9 +16,9 @@ one-release deprecation grace in PR 4 and is gone; compile plans with
 from __future__ import annotations
 
 import dataclasses
-import os
 import re
 import threading
+import warnings
 from typing import Iterator, Sequence
 
 from repro.core.api import ServableCircuit
@@ -160,103 +160,53 @@ class CircuitRegistry:
     def save_dir(
         self, path: str, *, validated_backend: str = "ref"
     ) -> list[str]:
-        """Write every tenant's artifact bundle(s) into ``path``.  Plain
-        tenants save as ``<tenant>.circuit.npz``; ensemble members as
-        ``<tenant>@m<member>.circuit.npz``.  Returns the paths written.
+        """Deprecated alias of ``ArtifactStore(path).put_registry(self)``
+        — one more release, then gone.
 
-        The directory becomes a *snapshot* of the registry: bundles for
-        tenants no longer registered are deleted, so a later `load_dir`
-        cannot resurrect circuits the operator removed.  Together with
-        `load_dir` this is the fleet-restart story: a serving host
-        persists its registry, restarts, and re-serves the exact same
-        circuits without refitting anything.  Tenant names loaded from
-        legacy directories (including ones containing ``@``) round-trip;
-        only names ending in the reserved ``@m<digits>`` member suffix
-        are rejected, since they could not be told apart from members on
-        the next load."""
-        os.makedirs(path, exist_ok=True)
-        with self._lock:
-            entries = dict(self._entries)
-        # validate every name before writing anything — no partial fleets
-        for tenant in entries:
-            if os.sep in tenant or tenant.startswith("."):
-                raise ValueError(
-                    f"tenant name {tenant!r} is not filesystem-safe"
-                )
-            if _MEMBER_SUFFIX.match(tenant):
-                raise ValueError(
-                    f"tenant name {tenant!r} ends in the reserved "
-                    f"'{ENSEMBLE_SEP}<digits>' ensemble-member suffix"
-                )
-        written = []
-        keep = set()
-        for tenant, members in entries.items():
-            for m, sc in enumerate(members):
-                stem = (tenant if len(members) == 1
-                        else f"{tenant}{ENSEMBLE_SEP}{m}")
-                keep.add(stem)
-                written.append(sc.save(
-                    os.path.join(path, stem + BUNDLE_SUFFIX),
-                    validated_backend=validated_backend,
-                ))
-        for fname in os.listdir(path):
-            if (fname.endswith(BUNDLE_SUFFIX)
-                    and fname[: -len(BUNDLE_SUFFIX)] not in keep):
-                os.remove(os.path.join(path, fname))
-        return written
+        The directory becomes a *snapshot* of the registry in the
+        content-addressed store layout (``manifest.json`` + ``objects/``):
+        tenants no longer registered are dropped from the manifest and
+        their unreferenced bundles garbage-collected, so a later
+        `load_dir` cannot resurrect circuits the operator removed.
+        Returns one written bundle path per member.  Tenant names loaded
+        from legacy directories (including ones containing ``@``)
+        round-trip; names ending in the reserved ``@m<digits>`` member
+        suffix are still rejected for compatibility with the legacy
+        layout."""
+        warnings.warn(
+            "CircuitRegistry.save_dir() is deprecated; use "
+            "repro.serve.artifacts.ArtifactStore(path).put_registry(registry)",
+            DeprecationWarning, stacklevel=2,
+        )
+        from repro.serve.artifacts import ArtifactStore
+
+        return ArtifactStore(path).put_registry(
+            self, validated_backend=validated_backend
+        )
 
     @classmethod
     def load_dir(cls, path: str) -> "CircuitRegistry":
-        """Rebuild a registry from a directory of artifact bundles written
-        by `save_dir` — tenant names (and ensemble member order) come from
-        the filenames.  Loaded circuits predict bit-identically to the
-        ones that were saved."""
-        reg = cls()
-        # '@m<digits>' is only an ensemble member marker when the files
-        # form a well-formed ensemble (members 0..k-1, k >= 2, no
-        # zero-padding — the only shape save_dir writes); any other stem
-        # is a plain tenant name verbatim, so directories written before
-        # the suffix was reserved (tenants like 'model@v2' or 'exp@2')
-        # restore under their original names.
-        candidates: dict[str, list[tuple[int, str, str]]] = {}
-        grouped: dict[str, list[tuple[str, str]]] = {}  # (stem, path)
-        for fname in sorted(os.listdir(path)):
-            if not fname.endswith(BUNDLE_SUFFIX):
-                continue
-            stem = fname[: -len(BUNDLE_SUFFIX)]
-            full = os.path.join(path, fname)
-            m = _MEMBER_SUFFIX.match(stem)
-            if m:
-                candidates.setdefault(m.group(1), []).append(
-                    (int(m.group(2)), stem, full)
-                )
-            else:
-                grouped[stem] = [(stem, full)]
-        for tenant, found in candidates.items():
-            found.sort()
-            if (tenant not in grouped  # a plain '<tenant>' bundle wins
-                    and len(found) >= 2
-                    and [i for i, _, _ in found] == list(range(len(found)))
-                    and all(s == f"{tenant}{ENSEMBLE_SEP}{i}"
-                            for i, s, _ in found)):  # no zero-padding
-                grouped[tenant] = [(s, p) for _, s, p in found]
-            else:  # legacy plain names that merely look like members —
-                # restore under their original stems, verbatim
-                for _, stem, p in found:
-                    grouped[stem] = [(stem, p)]
-        for tenant, entries in grouped.items():
-            circuits = [ServableCircuit.load(p) for _, p in entries]
-            try:
-                reg.add_ensemble(tenant, circuits)
-            except ValueError:
-                if len(entries) == 1:
-                    raise
-                # a member-shaped group that is not actually a coherent
-                # ensemble (mismatched widths/classes) can only be legacy
-                # plain tenants — restore them individually, verbatim
-                for (stem, _), sc in zip(entries, circuits):
-                    reg.add(stem, sc)
-        return reg
+        """Deprecated alias of ``ArtifactStore(path).load_registry()`` —
+        one more release, then gone.  Dispatches on the directory layout:
+        a store manifest loads through `ArtifactStore`; a legacy flat
+        directory of ``<tenant>.circuit.npz`` bundles loads through
+        `repro.serve.artifacts.load_legacy_registry_dir` (filename-based
+        tenant naming, same disambiguation rules as ever).  Either way
+        loaded circuits predict bit-identically to the ones saved."""
+        warnings.warn(
+            "CircuitRegistry.load_dir() is deprecated; use "
+            "repro.serve.artifacts.ArtifactStore(path).load_registry() "
+            "(or load_legacy_registry_dir for pre-store directories)",
+            DeprecationWarning, stacklevel=2,
+        )
+        from repro.serve.artifacts import (
+            ArtifactStore,
+            load_legacy_registry_dir,
+        )
+
+        if ArtifactStore.is_store(path):
+            return ArtifactStore(path).load_registry()
+        return load_legacy_registry_dir(path)
 
     # -- queries -------------------------------------------------------
     def __contains__(self, tenant: str) -> bool:

@@ -25,6 +25,7 @@ produced.
 from __future__ import annotations
 
 import dataclasses
+import logging
 import threading
 import time
 from typing import Callable
@@ -35,6 +36,7 @@ import numpy as np
 
 from repro import runtime
 from repro.core import encoding as E
+from repro.runtime import aot as runtime_aot
 from repro.core.api import decode_predictions
 from repro.serve.circuits.metrics import (
     TICK_PHASES,
@@ -51,6 +53,8 @@ from repro.serve.planning import (
     ensemble_vote,
 )
 from repro.sharding import specs
+
+_log = logging.getLogger("repro.serve.aot")
 
 
 class StalePlanError(RuntimeError):
@@ -149,6 +153,32 @@ class CircuitServer:
         # shard s launches on device s % n (only when the policy shards
         # and the host actually has multiple devices)
         self._devices = self._shard_devices(policy)
+        # -- AOT executables -------------------------------------------
+        # compiled span launches keyed by (shard content hash, span
+        # bucket, device ordinal); populated by prewarm_plan /
+        # preload_executables, or compiled on first tick miss.  Only
+        # meaningful on supports_aot backends with stable shapes — the
+        # launch shape must be a pure function of (shard, span bucket)
+        # for a compiled executable to be reusable across ticks.
+        self._aot_lock = threading.Lock()
+        self._aot: dict[tuple[str, int, int], object] = {}
+        # uploads staged by prewarm_plan, consumed (and counted as
+        # rebuilt) by the next swap_plan fence — staging keeps the
+        # reused/rebuilt accounting honest while moving the transfer
+        # off the swap's critical path
+        self._staged_dev: dict[str, tuple] = {}
+        # launch-shape signatures the eager jit cache is already hot
+        # for (no-AOT backends): a repeat prewarm of the same shapes is
+        # a no-op, so churny swap loops don't pay a dead launch each
+        self._warm_shapes: set[tuple] = set()
+        self._spans_seen: set[int] = set()   # span buckets ticks produced
+        self._aot_capable = bool(
+            self.backend.capabilities().supports_aot
+        ) and self.stable_shapes
+        self.aot_stats = {
+            "exec_hits": 0, "compiles": 0, "loads": 0,
+            "load_failures": 0, "trace_warms": 0, "exec_warms": 0,
+        }
 
     def _launch_span(self, kind: str, **meta):
         """Launch hook handed to `EvalBackend.instrument` — one trace
@@ -270,6 +300,7 @@ class CircuitServer:
             for shard in compiled.shards:
                 dev[shard.content_hash] = (
                     self._dev.get(shard.content_hash)
+                    or self._staged_dev.pop(shard.content_hash, None)
                     or self._upload_shard(shard)
                 )
             self._compiled = compiled
@@ -288,6 +319,299 @@ class CircuitServer:
             for t in host
         )
 
+    # -- ahead-of-time executables --------------------------------------
+    @staticmethod
+    def _dev_key(device) -> int:
+        return -1 if device is None else int(device.id)
+
+    def span_bucket(self, words: int) -> int:
+        """The launch bucket a tick would round ``words`` up to: next
+        power of two, then padded to the plan's span alignment — the
+        exact quantization `tick()` applies, so prewarm/export and the
+        live launch agree on shapes."""
+        span = 1 << (max(int(words), 1) - 1).bit_length()
+        return -(-span // self.span_align) * self.span_align
+
+    def spans_seen(self) -> tuple[int, ...]:
+        """Span buckets ticks have actually launched (ascending) — the
+        shapes worth prewarming or exporting."""
+        return tuple(sorted(self._spans_seen))
+
+    def _span_spec(self, shard, span: int) -> runtime_aot.SpanLaunchSpec:
+        return runtime_aot.SpanLaunchSpec(
+            n_slots=shard.n_slots,
+            k_pad=shard.n_slots,  # stable_shapes pads the launch to S
+            n_nodes=int(shard.opcodes.shape[1]),
+            n_outputs=int(shard.out_src.shape[1]),
+            n_inputs=int(shard.n_inputs_max),
+            span_words=int(span),
+        )
+
+    def _aot_executable(self, shard, span: int, device):
+        """Compiled launch for (shard, span bucket) — cache hit, or
+        compile-and-cache on a supports_aot backend; None means "use the
+        eager traced path"."""
+        if not self._aot_capable:
+            return None
+        key = (shard.content_hash, int(span), self._dev_key(device))
+        with self._aot_lock:
+            fn = self._aot.get(key)
+        if fn is not None:
+            self.aot_stats["exec_hits"] += 1
+            return fn
+        fn = self.backend.compile_spans(
+            self._span_spec(shard, span), device=device
+        )
+        self.aot_stats["compiles"] += 1
+        with self._aot_lock:
+            return self._aot.setdefault(key, fn)
+
+    def _prewarm_shard(self, shard, spans, store, summary: dict) -> None:
+        """Make every (shard, span) launch hot before it serves: load a
+        stored executable, else AOT-compile, else (no-AOT backend) trace
+        the eager jit path once with the exact launch shapes."""
+        device = self._device_for(shard.shard)
+        # device tensors: upload now (staged) so the swap fence — and any
+        # warm launch below — reuses the transfer instead of doing it
+        # with the plan lock held
+        with self._plan_lock:
+            cached = self._dev.get(shard.content_hash)
+            if cached is None:
+                cached = self._staged_dev.get(shard.content_hash)
+        if cached is None:
+            cached = self._upload_shard(shard)
+            with self._plan_lock:
+                cached = self._staged_dev.setdefault(
+                    shard.content_hash, cached
+                )
+        for span in spans:
+            span = int(span)
+            if self._aot_capable:
+                key = (shard.content_hash, span, self._dev_key(device))
+                with self._aot_lock:
+                    if key in self._aot:
+                        continue
+                fn = None
+                if store is not None and device is None:
+                    # persisted executables are compiled for the default
+                    # device; a multi-device placement recompiles instead
+                    kstr = runtime_aot.executable_key(
+                        self.backend.name, shard.content_hash, span
+                    )
+                    try:
+                        fn = runtime_aot.deserialize_executable(
+                            store.get_executable(kstr)
+                        )
+                        summary["loaded"] += 1
+                        self.aot_stats["loads"] += 1
+                    except KeyError:
+                        pass  # not exported for this shape — compile
+                    except Exception as err:  # noqa: BLE001 — any broken
+                        # artifact (corrupt bytes, missing object file,
+                        # incompatible runtime) falls back to compiling
+                        summary["load_failures"] += 1
+                        self.aot_stats["load_failures"] += 1
+                        _log.warning(
+                            "stored executable %s unusable (%s: %s); "
+                            "falling back to compile", kstr,
+                            type(err).__name__, err,
+                        )
+                if fn is None:
+                    fn = self.backend.compile_spans(
+                        self._span_spec(shard, span), device=device
+                    )
+                    summary["compiled"] += 1
+                    self.aot_stats["compiles"] += 1
+                with self._aot_lock:
+                    fn = self._aot.setdefault(key, fn)
+                # an executable's first call pays one-time runtime
+                # binding (comparable to a whole steady tick) — spend it
+                # on dead zero inputs now, off the serving path, so the
+                # first real launch runs at steady latency.  Args mirror
+                # the tick's exactly (staged device tensors + uploaded
+                # buffers), not host zeros: binding is per argument
+                # placement
+                k_pad = shard.n_slots
+                x = np.zeros(
+                    (shard.n_inputs_max, k_pad * span), np.uint32
+                )
+                woff = np.arange(k_pad, dtype=np.int32) * span
+                live = np.zeros(k_pad, np.int32)
+                if device is None:
+                    x_dev, woff_dev, live_dev = (
+                        jnp.asarray(x), jnp.asarray(woff), jnp.asarray(live)
+                    )
+                else:
+                    x_dev, woff_dev, live_dev = (
+                        jax.device_put(x, device),
+                        jax.device_put(woff, device),
+                        jax.device_put(live, device),
+                    )
+                out = fn(
+                    *cached, np.zeros(k_pad, np.int32),
+                    x_dev, woff_dev, live_dev,
+                )
+                jax.block_until_ready(out)
+                summary["exec_warmed"] += 1
+                self.aot_stats["exec_warms"] += 1
+            else:
+                # no-AOT backend (e.g. "ref"): warm its jit cache with a
+                # dead launch of the exact shapes the tick will use, so
+                # the first post-swap tick is a cache hit, not a trace
+                sig = (shard.n_slots, int(shard.opcodes.shape[1]),
+                       int(shard.out_src.shape[1]),
+                       int(shard.n_inputs_max), span, self._dev_key(device))
+                if sig in self._warm_shapes:
+                    continue  # jit cache already hot for these shapes
+                opc, edge, outs, in_w = cached
+                k_pad = shard.n_slots
+                slots = np.zeros(k_pad, np.int64)
+                x = np.zeros(
+                    (shard.n_inputs_max, k_pad * span), np.uint32
+                )
+                woff = np.arange(k_pad, dtype=np.int32) * span
+                live = np.zeros(k_pad, np.int32)
+                if device is None:
+                    x_dev, woff_dev, live_dev = (
+                        jnp.asarray(x), jnp.asarray(woff), jnp.asarray(live)
+                    )
+                else:
+                    x_dev, woff_dev, live_dev = (
+                        jax.device_put(x, device),
+                        jax.device_put(woff, device),
+                        jax.device_put(live, device),
+                    )
+                out = self.backend.eval_population_spans(
+                    opc[slots], edge[slots], outs[slots],
+                    x_dev, woff_dev, in_w[slots] * live_dev,
+                    span_words=span,
+                )
+                jax.block_until_ready(out)
+                self._warm_shapes.add(sig)
+                summary["trace_warmed"] += 1
+                self.aot_stats["trace_warms"] += 1
+
+    def prewarm_plan(
+        self, compiled: CompiledPlan, *, spans=None, store=None,
+    ) -> dict:
+        """Make an incoming plan's launch shapes hot *before* it is
+        installed — the anti-dip half of a plan swap.
+
+        For every shard × span bucket: load the serialized executable
+        from ``store`` when one is keyed for it, else compile ahead of
+        time (supports_aot backends), else trace-warm the eager jit path
+        (no-AOT backends like ``"ref"``).  ``spans`` defaults to the
+        buckets this server's ticks have actually produced, so a server
+        that has never ticked prewarms nothing.  Runs outside the plan
+        lock: serving continues on the old plan while the new one warms.
+        Returns a summary dict (loaded/compiled/trace_warmed/...).
+        """
+        summary = {"loaded": 0, "compiled": 0, "trace_warmed": 0,
+                   "exec_warmed": 0, "load_failures": 0, "skipped": 0}
+        if not self.stable_shapes:
+            # launch shapes depend on live tenant count — nothing to warm
+            summary["skipped"] = len(compiled.shards)
+            _log.info(
+                "prewarm skipped: stable_shapes=False makes launch shapes "
+                "traffic-dependent"
+            )
+            return summary
+        use = sorted(
+            {int(s) for s in (self._spans_seen if spans is None else spans)}
+        )
+        for shard in compiled.shards:
+            self._prewarm_shard(shard, use, store, summary)
+        return summary
+
+    def export_executables(self, store, *, spans=None) -> list[str]:
+        """Persist the current plan's compiled launches into an
+        `ArtifactStore`: one serialized executable per shard × span
+        bucket, keyed by ``(backend, shard content hash, span bucket)``.
+        Executables are compiled for the default device (a booting host's
+        placement).  On a backend that declares no AOT support this
+        stores nothing and logs why — boot from such an artifact falls
+        back to trace-on-boot.  Returns the stored keys."""
+        caps = self.backend.capabilities()
+        if not caps.supports_aot:
+            _log.info(
+                "backend %r declares supports_aot=False: no executables "
+                "exported, artifact boot will trace", self.backend.name,
+            )
+            return []
+        if not self.stable_shapes:
+            _log.info(
+                "stable_shapes=False: launch shapes are traffic-dependent, "
+                "no executables exported"
+            )
+            return []
+        plan, _, _ = self._refresh_plan()
+        use = sorted(
+            {int(s) for s in (self._spans_seen if spans is None else spans)}
+        ) or [self.span_bucket(1)]
+        keys = []
+        for shard in plan.shards:
+            for span in use:
+                key = (shard.content_hash, span, -1)
+                with self._aot_lock:
+                    fn = self._aot.get(key)
+                if fn is None:
+                    fn = self.backend.compile_spans(
+                        self._span_spec(shard, span)
+                    )
+                    self.aot_stats["compiles"] += 1
+                    with self._aot_lock:
+                        fn = self._aot.setdefault(key, fn)
+                kstr = runtime_aot.executable_key(
+                    self.backend.name, shard.content_hash, span
+                )
+                store.put_executable(
+                    kstr, runtime_aot.serialize_executable(fn),
+                    backend=self.backend.name,
+                    aot_format=caps.aot_format,
+                    aot_format_version=caps.aot_format_version,
+                    spec=tuple(self._span_spec(shard, span)),
+                )
+                keys.append(kstr)
+        return keys
+
+    def preload_executables(self, store) -> dict:
+        """Boot-time half of `export_executables`: bind every stored
+        executable that matches the current plan's shard hashes (and this
+        backend/format) into the launch cache — **zero tracing** when the
+        artifact covers the plan.  Mismatched or broken entries fall back
+        to compiling, with the reason logged.  Returns the prewarm
+        summary."""
+        plan, _, _ = self._refresh_plan()
+        caps = self.backend.capabilities()
+        spans_by_hash: dict[str, set[int]] = {}
+        prefix = f"{self.backend.name}--"
+        for kstr, entry in store.executable_entries().items():
+            if entry.get("backend") != self.backend.name:
+                continue
+            if (entry.get("format") != caps.aot_format
+                    or int(entry.get("format_version", 0))
+                    > caps.aot_format_version):
+                _log.warning(
+                    "stored executable %s has format %s v%s; this backend "
+                    "reads %s v<=%s — skipped (will compile)",
+                    kstr, entry.get("format"), entry.get("format_version"),
+                    caps.aot_format, caps.aot_format_version,
+                )
+                continue
+            if not kstr.startswith(prefix) or "--s" not in kstr:
+                continue
+            body, span_s = kstr[len(prefix):].rsplit("--s", 1)
+            spans_by_hash.setdefault(body, set()).add(int(span_s))
+        summary = {"loaded": 0, "compiled": 0, "trace_warmed": 0,
+                   "exec_warmed": 0, "load_failures": 0, "skipped": 0}
+        for shard in plan.shards:
+            spans = sorted(spans_by_hash.get(shard.content_hash, ()))
+            if not spans:
+                continue
+            self._spans_seen.update(spans)
+            self._prewarm_shard(shard, spans, store, summary)
+        return summary
+
     def swap_plan(
         self,
         compiled: CompiledPlan,
@@ -295,6 +619,8 @@ class CircuitServer:
         compiler: PlanCompiler | None = None,
         action: str = "swap",
         reason: str = "",
+        prewarm: bool = True,
+        store=None,
     ) -> RebalanceEvent:
         """Generation-fenced atomic plan swap — the autoscaling hook.
 
@@ -313,7 +639,31 @@ class CircuitServer:
         .shards_reused` counts them).  ``compiler`` (when given) becomes
         the server's compiler, so the swapped policy — shard count,
         assignment — also governs future generation-triggered refreshes.
+
+        ``prewarm`` (default on) makes the incoming plan's launch shapes
+        hot *before* the fence: executables load from ``store`` or
+        compile ahead of time (AOT backends), or the eager jit cache is
+        trace-warmed (no-AOT backends) — all while serving continues on
+        the old plan, so the first post-swap tick launches without a
+        compile in its critical path.
         """
+        # fast-fail the fence before spending prewarm work on a plan
+        # that is already stale (the lock re-checks authoritatively)
+        if compiled.generation != self.registry.generation:
+            raise StalePlanError(
+                f"plan compiled at generation {compiled.generation}, "
+                f"registry is at {self.registry.generation}"
+            )
+        prewarm_summary = None
+        if prewarm and self._aot_capable:
+            # swap-integrated prewarm is AOT-only: compiled executables
+            # are keyed by shard content hash so the work is reusable,
+            # and cache hits make repeat swaps near-free.  On no-AOT
+            # backends a trace-warm would hold the recompile→fence
+            # window open for whole jit traces under churn — those
+            # servers warm on first tick (or via an explicit
+            # `prewarm_plan` call at boot) instead.
+            prewarm_summary = self.prewarm_plan(compiled, store=store)
         t0 = time.perf_counter()
         with self._plan_lock:
             if compiled.generation != self.registry.generation:
@@ -332,13 +682,18 @@ class CircuitServer:
             for shard in compiled.shards:
                 cached = self._dev.get(shard.content_hash)
                 if cached is None:
+                    # a prewarm-staged upload still counts as rebuilt —
+                    # the transfer happened for this swap, just earlier
                     rebuilt += 1
-                    cached = self._upload_shard(shard)
+                    cached = self._staged_dev.pop(shard.content_hash, None)
+                    if cached is None:
+                        cached = self._upload_shard(shard)
                 else:
                     reused += 1
                 dev[shard.content_hash] = cached
             self._compiled = compiled
             self._dev = dev
+            self._staged_dev.clear()
             with self._lock:
                 inflight = sum(
                     len(reqs) for reqs in self._pending.values()
@@ -366,6 +721,10 @@ class CircuitServer:
             shards_reused=reused, shards_rebuilt=rebuilt,
             inflight=inflight, swap_ms=round(event.swap_ms, 3),
             generation=event.generation,
+            **(
+                {"prewarm_" + k: v for k, v in prewarm_summary.items() if v}
+                if prewarm_summary else {}
+            ),
         )
         return event
 
@@ -564,14 +923,50 @@ class CircuitServer:
                     x_dev = jax.device_put(x_buf, device)
                     live_dev = jax.device_put(live, device)
                     woff = jax.device_put(woff_host, device)
+            self._spans_seen.add(span)
+            aot_fn = None
+            if self._aot_capable:
+                try:
+                    aot_fn = self._aot_executable(shard, span, device)
+                except Exception as err:  # noqa: BLE001 — AOT is an
+                    # optimization; any compile failure degrades to the
+                    # traced path rather than failing the tick
+                    _log.warning(
+                        "AOT compile failed for shard %d span %d (%s: %s); "
+                        "using traced launch", shard_idx, span,
+                        type(err).__name__, err,
+                    )
             t2 = perf()
             with tracer.span("tick.launch", cat="tick", shard=shard_idx,
                              span_words=span, slots=k_active):
-                out = self._exec.eval_population_spans(
-                    opc[slots], edge[slots], outs[slots],
-                    x_dev, woff, in_w[slots] * live_dev,
-                    span_words=span,
-                )
+                if aot_fn is not None:
+                    # pre-compiled executable: gather + mask fused inside,
+                    # so the call never traces — same span name as the
+                    # instrumented eager path keeps the timeline uniform
+                    with self._launch_span(
+                        "eval_population_spans",
+                        population=int(k_pad), span_words=int(span),
+                        aot=True,
+                    ):
+                        out = aot_fn(
+                            opc, edge, outs, in_w,
+                            slots.astype(np.int32), x_dev, woff, live_dev,
+                        )
+                else:
+                    out = self._exec.eval_population_spans(
+                        opc[slots], edge[slots], outs[slots],
+                        x_dev, woff, in_w[slots] * live_dev,
+                        span_words=span,
+                    )
+                    if self.stable_shapes:
+                        # this launch just warmed the eager jit cache for
+                        # these shapes — prewarm can skip them
+                        self._warm_shapes.add((
+                            shard.n_slots, int(shard.opcodes.shape[1]),
+                            int(shard.out_src.shape[1]),
+                            int(shard.n_inputs_max), span,
+                            self._dev_key(device),
+                        ))
             phase["device_put"] += t2 - t1
             phase["launch"] += perf() - t2
             launches.append((shard_idx, span, items, out))

@@ -19,8 +19,14 @@ launches in time.  This package places *tenants on hosts*:
     cluster load harness (`workload`);
   * `RebalanceCadence` — periodic load-gated `rebalance()` driven by
     observed routed rows, replacing scripted mid-replay calls
-    (`cadence`).
+    (`cadence`);
+  * `FleetArtifact` / `HostConfig` — the exported shape of a whole
+    cluster inside one `ArtifactStore`: circuits + fleet plan + exact
+    per-host placements + serialized AOT executables, so
+    `FleetRouter.boot_from_artifact` restarts the fleet with zero
+    tracing on AOT backends (`artifact`).
 """
+from repro.serve.fleet.artifact import FleetArtifact, HostConfig
 from repro.serve.fleet.cadence import RebalanceCadence
 from repro.serve.fleet.host import ServingHost, dump_bundle, load_bundle
 from repro.serve.fleet.plan import FleetPlan, FleetPlanner, HashRing
@@ -42,10 +48,12 @@ from repro.serve.fleet.workload import (
 )
 
 __all__ = [
+    "FleetArtifact",
     "FleetPlan",
     "FleetPlanner",
     "FleetRouter",
     "HashRing",
+    "HostConfig",
     "InProcTransport",
     "MigrationEvent",
     "RebalanceCadence",

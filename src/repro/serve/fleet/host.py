@@ -27,6 +27,7 @@ in-process and subprocess deployments behaviorally identical.
 from __future__ import annotations
 
 import dataclasses
+import logging
 import os
 import tempfile
 import time
@@ -34,15 +35,18 @@ from typing import Callable
 
 import numpy as np
 
-from repro.core.api import ServableCircuit
+from repro.core.api import ServableCircuit, load_servable, save_servable
 from repro.serve.async_frontend.frontend import AsyncCircuitServer
 from repro.serve.circuits.metrics import FrontendStats
 from repro.serve.circuits.registry import CircuitRegistry, TenantQoS
 from repro.serve.circuits.server import CircuitServer, StalePlanError
+from repro.serve.fleet.artifact import FleetArtifact, HostConfig
 from repro.serve.observability.trace import TraceRecorder
 from repro.serve.planning import PlacementPolicy
 
 _SWAP_RETRIES = 8
+
+_log = logging.getLogger("repro.serve.aot")
 
 
 def load_bundle(raw: bytes) -> ServableCircuit:
@@ -55,7 +59,7 @@ def load_bundle(raw: bytes) -> ServableCircuit:
     try:
         with os.fdopen(fd, "wb") as f:
             f.write(raw)
-        return ServableCircuit.load(path)
+        return load_servable(path)
     finally:
         os.unlink(path)
 
@@ -64,7 +68,7 @@ def dump_bundle(circuit: ServableCircuit, backend: str) -> bytes:
     fd, path = tempfile.mkstemp(suffix=".npz")
     os.close(fd)
     try:
-        circuit.save(path, validated_backend=backend)
+        save_servable(circuit, path, validated_backend=backend)
         with open(path, "rb") as f:
             return f.read()
     finally:
@@ -129,6 +133,101 @@ class ServingHost:
 
     def __exit__(self, *exc) -> None:
         self.stop()
+
+    # -- AOT artifacts -------------------------------------------------
+    def host_config(self) -> HostConfig:
+        """This host's serving shape for a `FleetArtifact`: backend,
+        shard policy, the *exact* live placement (possibly a sticky-
+        recompiled layout no fresh compile would reproduce), and the
+        span buckets traffic actually used."""
+        plan = self.server.plan()
+        return HostConfig(
+            host_id=self.host_id,
+            backend=self.server.backend.name,
+            n_shards=self.server.policy.n_shards,
+            span_align=self.server.span_align,
+            assignment_mode=self.server.policy.assignment,
+            stable_shapes=self.server.stable_shapes,
+            tenants=tuple(self.registry),
+            placement={
+                t: tuple((ref.shard, ref.slot) for ref in refs)
+                for t, refs in plan.placement.items()
+            },
+            spans=self.server.spans_seen(),
+        )
+
+    def export_artifact(self, store, *, spans=None) -> HostConfig:
+        """Persist this host's compiled launches into ``store`` and
+        return the config a `boot_from_artifact` needs to rebuild it.
+        On a no-AOT backend no executables are stored (the boot falls
+        back to trace-on-boot, reason logged by the server)."""
+        self.server.export_executables(store, spans=spans)
+        return self.host_config()
+
+    @classmethod
+    def boot_from_artifact(
+        cls,
+        host_id: str,
+        path: str,
+        *,
+        tracer: "TraceRecorder | None" = None,
+        clock: Callable[[], float] = time.monotonic,
+        latency_est_s: float = 0.0,
+    ) -> "ServingHost":
+        """Reconstruct one fleet member from a `FleetArtifact` with zero
+        tracing on an AOT backend: circuits load from the store, the
+        exported placement recompiles byte-identically (same shard
+        content hashes), and the persisted executables bind straight
+        into the launch cache.  A placement the stored circuits no
+        longer satisfy falls back to a fresh compile; mismatched or
+        corrupt executables fall back to compiling — both logged, never
+        fatal."""
+        from repro.serve.artifacts import ArtifactStore
+
+        store = ArtifactStore(path)
+        art = FleetArtifact.load(store)
+        cfg = art.host_configs.get(host_id)
+        if cfg is None:
+            raise KeyError(
+                f"fleet artifact at {path!r} has no host {host_id!r} "
+                f"(hosts: {sorted(art.host_configs)})"
+            )
+        full = store.load_registry()
+        registry = CircuitRegistry()
+        for tenant in cfg.tenants:  # registration order preserved
+            registry.add_ensemble(
+                tenant, full.members(tenant), qos=full.qos(tenant)
+            )
+        host = cls(
+            host_id, registry,
+            backend=cfg.backend,
+            policy=PlacementPolicy(
+                n_shards=cfg.n_shards, span_align=cfg.span_align,
+                assignment=cfg.assignment_mode,
+            ),
+            tracer=tracer, clock=clock, latency_est_s=latency_est_s,
+        )
+        server = host.server
+        try:
+            compiled = server.compiler.compile_from_placement(
+                registry.catalog(),
+                {t: [list(p) for p in pairs]
+                 for t, pairs in cfg.placement.items()},
+                cfg.n_shards,
+            )
+            server.swap_plan(
+                compiled, action="boot", reason="artifact", prewarm=False
+            )
+        except (ValueError, StalePlanError) as err:
+            _log.warning(
+                "host %r: exported placement unusable (%s: %s); booting "
+                "with a fresh compile — persisted executables whose shard "
+                "hashes no longer match will recompile",
+                host_id, type(err).__name__, err,
+            )
+            server.plan()
+        server.preload_executables(store)
+        return host
 
     # -- plan cutover --------------------------------------------------
     def _swap(self, action: str, reason: str) -> None:
@@ -333,6 +432,21 @@ class ServingHost:
             return {"enabled": False}
         return {"enabled": True, "host_id": self.host_id,
                 **self.evolution.report()}
+
+    def _rpc_export_artifact(self, payload: dict) -> dict:
+        """Write this host's executables into the artifact store at
+        ``payload["path"]`` (a path both ends can see — artifact export
+        assumes a shared filesystem) and return its boot config."""
+        from repro.serve.artifacts import ArtifactStore
+
+        store = ArtifactStore(payload["path"])
+        keys = self.server.export_executables(
+            store, spans=payload.get("spans")
+        )
+        return {
+            "config": self.host_config().to_manifest(),
+            "exported": list(keys),
+        }
 
     def _rpc_shutdown(self, payload: dict) -> dict:
         self.stop()

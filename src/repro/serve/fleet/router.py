@@ -45,6 +45,7 @@ from typing import Callable, Mapping, Sequence
 import numpy as np
 
 from repro.serve.autoscale.controller import CounterWindow
+from repro.serve.circuits.registry import CircuitRegistry
 from repro.serve.fleet.host import dump_bundle
 from repro.serve.fleet.plan import FleetPlan, FleetPlanner, _plan_hash
 from repro.serve.fleet.transport import Transport, _ERROR_TYPES
@@ -473,6 +474,152 @@ class FleetRouter:
         for x, deadline_s, fut in parked:
             self._dispatch(tenant, x, deadline_s, fut)
         return event
+
+    # -- AOT artifacts -------------------------------------------------
+    def export_fleet(self, path: str, *, spans=None) -> dict:
+        """Freeze the live cluster into one bootable `FleetArtifact`.
+
+        Three serial passes over one `ArtifactStore` at ``path``:
+        every tenant's bundles ship router-side over the same
+        ``export_tenant`` RPC a migration uses and land in the store's
+        registry section; each host then writes its compiled launch
+        executables (``export_artifact`` RPC — hosts and router must
+        share the filesystem at ``path``) and reports its boot config;
+        finally the fleet plan + host configs become the manifest's
+        fleet section.  Returns a summary dict."""
+        from repro.serve.artifacts import ArtifactStore
+        from repro.serve.circuits.registry import TenantQoS
+        from repro.serve.fleet.artifact import FleetArtifact, HostConfig
+        from repro.serve.fleet.host import load_bundle
+
+        with self._lock:
+            transports = dict(self._transports)
+            owners = dict(self._owners)
+            plan = self._plan
+        merged = CircuitRegistry()
+        for tenant in sorted(owners):
+            export = transports[owners[tenant]].call(
+                "export_tenant", {"tenant": tenant}
+            )
+            merged.add_ensemble(
+                tenant,
+                [load_bundle(raw) for raw in export["bundles"]],
+                qos=TenantQoS(**export["qos"]),
+            )
+        store = ArtifactStore(path)
+        store.put_registry(merged)
+        host_configs: "dict[str, HostConfig]" = {}
+        exported = 0
+        for host_id, transport in sorted(transports.items()):
+            out = transport.call("export_artifact", {
+                "path": path,
+                "spans": None if spans is None else [int(s) for s in spans],
+            })
+            host_configs[host_id] = HostConfig.from_manifest(
+                host_id, out["config"]
+            )
+            exported += len(out["exported"])
+        artifact = FleetArtifact(
+            generation=plan.generation,
+            content_hash=plan.content_hash,
+            hosts=tuple(sorted(transports)),
+            assignment=dict(owners),
+            pins={t: h for t, h in plan.pins.items() if t in owners},
+            host_configs=host_configs,
+        )
+        # reopen: each export_artifact RPC appended executables through
+        # its own store handle, so this handle's manifest is stale — a
+        # flush from it would wipe their entries
+        artifact.save(ArtifactStore(path))
+        self.tracer.instant(
+            "fleet.export", cat="fleet", track="router",
+            path=path, tenants=len(merged), hosts=len(host_configs),
+            executables=exported,
+        )
+        return {
+            "path": path,
+            "tenants": len(merged),
+            "hosts": len(host_configs),
+            "executables": exported,
+        }
+
+    @classmethod
+    def boot_from_artifact(
+        cls,
+        path: str,
+        *,
+        transport_factory: "Callable | None" = None,
+        planner: "FleetPlanner | None" = None,
+        tracer: "TraceRecorder | None" = None,
+        clock: Callable[[], float] = time.monotonic,
+        max_workers: int = 8,
+        start_hosts: bool = True,
+    ) -> "FleetRouter":
+        """Boot a whole cluster from a `FleetArtifact` — the cold-start
+        path: no fitting, no migrations, and on AOT backends no tracing.
+
+        By default every host boots in-process
+        (`ServingHost.boot_from_artifact` behind an `InProcTransport`).
+        ``transport_factory(host_id, path, host_config) → Transport``
+        overrides that for real deployments where each host process
+        boots itself from the shared artifact and the router merely
+        connects.  The routing table installs verbatim from the exported
+        plan — ownership, pins and plan generation come back exactly,
+        with no re-derivation that could shuffle deliberately migrated
+        tenants."""
+        from repro.serve.artifacts import ArtifactStore
+        from repro.serve.fleet.artifact import FleetArtifact
+
+        store = ArtifactStore(path)
+        artifact = FleetArtifact.load(store)
+        router = cls(
+            planner=planner, tracer=tracer, clock=clock,
+            max_workers=max_workers,
+        )
+        for host_id in artifact.hosts:
+            if transport_factory is not None:
+                transport = transport_factory(
+                    host_id, path, artifact.host_configs[host_id]
+                )
+            else:
+                from repro.serve.fleet.host import ServingHost
+                from repro.serve.fleet.transport import InProcTransport
+
+                host = ServingHost.boot_from_artifact(
+                    host_id, path, tracer=tracer, clock=clock
+                )
+                if start_hosts:
+                    host.start()
+                transport = InProcTransport(host)
+            pong = transport.call("ping")
+            if pong.get("host_id") != host_id:
+                raise ValueError(
+                    f"transport answers as {pong.get('host_id')!r}, "
+                    f"expected {host_id!r}"
+                )
+            with router._lock:
+                router._transports[host_id] = transport
+                router.requests_routed.setdefault(host_id, 0)
+        registry = store.load_registry()
+        with router._lock:
+            router._owners = dict(artifact.assignment)
+            router._features = {
+                t: int(registry.get(t).encoder.n_features)
+                for t in artifact.assignment
+            }
+            router._plan = FleetPlan(
+                hosts=tuple(artifact.hosts),
+                assignment=dict(artifact.assignment),
+                pins=dict(artifact.pins),
+                generation=artifact.generation,
+                content_hash=artifact.content_hash,
+            )
+        router.tracer.instant(
+            "fleet.boot", cat="fleet", track="router",
+            path=path, hosts=len(artifact.hosts),
+            tenants=len(artifact.assignment),
+        )
+        return router
 
     # -- telemetry -----------------------------------------------------
     def host_stats(self) -> "dict[str, dict]":

@@ -18,7 +18,6 @@ import numpy as np
 
 from repro.core import gates
 from repro.core.api import ServableCircuit
-from repro.core.genome import opcodes as genome_opcodes
 
 
 class Catalog(NamedTuple):
@@ -58,7 +57,11 @@ def pad_genome(
         return np.where(ids < i_t, ids, ids - i_t + i_max)
 
     opc = np.full(n_max, gates.BUF_A, np.int32)
-    opc[:n_t] = np.asarray(genome_opcodes(sc.genome, sc.spec), np.int32)
+    # numpy equivalent of `repro.core.genome.opcodes`: its jnp gather costs
+    # a tiny pjit compile per distinct genome shape, which on a cold boot
+    # is most of the plan-compile wall time
+    fn_set = np.asarray(sc.spec.fn_set, np.int32)
+    opc[:n_t] = fn_set[np.asarray(sc.genome.gate_fn, np.int64)]
     edge = np.zeros((n_max, 2), np.int32)
     edge[:n_t] = remap(np.asarray(sc.genome.edge_src, np.int64))
     outs = np.zeros(o_max, np.int32)
